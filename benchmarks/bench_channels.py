@@ -1,0 +1,48 @@
+"""Paper Fig. 4B: performance vs number of channels (the communications
+bottleneck).  Qualitative claims: performance degrades as C shrinks; the
+degradation of LEARN-GDM is smaller than the baselines' (resilience via
+variable chain lengths + executing nodes)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_csv, scaled
+from repro.core import GreedyController, LearnGDMController, opt_upper_bound
+from repro.sim import EdgeSimulator, SimConfig
+from benchmarks.bench_users import _train_variant
+
+
+def run(channel_counts=(1, 2, 3, 4), eval_eps: int = 5) -> dict:
+    train_eps = scaled(120, lo=25)
+    rows = []
+    summary = {}
+    t0 = time.time()
+    for c in channel_counts:
+        cfg = SimConfig(num_ues=15, num_channels=int(c), horizon=40, seed=0)
+        point = {}
+        for variant in ("learn-gdm", "mp", "fp"):
+            ctrl = _train_variant(cfg, variant, train_eps)
+            point[variant] = ctrl.evaluate(eval_eps)["reward"]
+        env = EdgeSimulator(cfg)
+        point["gr"] = GreedyController(env).evaluate(eval_eps)["reward"]
+        point["opt"] = float(np.mean(
+            [opt_upper_bound(env, seed=9_000 + e)["reward"]
+             for e in range(eval_eps)]))
+        rows.append((c, point["learn-gdm"], point["mp"], point["fp"],
+                     point["gr"], point["opt"]))
+        summary[c] = point
+    wall = time.time() - t0
+    save_csv("fig4b_channels", ["channels", "learn_gdm", "mp", "fp", "gr", "opt"],
+             rows)
+    lg_drop = rows[-1][1] - rows[0][1]
+    gr_drop = rows[-1][4] - rows[0][4]
+    emit("fig4b_channels", wall * 1e6 / max(len(rows), 1),
+         f"drop C={channel_counts[-1]}->[{channel_counts[0]}]: "
+         f"learn-gdm={-lg_drop:.2f} gr={-gr_drop:.2f}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

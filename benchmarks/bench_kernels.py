@@ -1,0 +1,63 @@
+"""Kernel micro-benchmarks: us/call of the jitted XLA path on this host and
+interpret-mode equivalence checks (the TPU-perf claims are structural — see
+EXPERIMENTS.md §Roofline — since this container has no TPU)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(0)
+
+
+def arr(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def run() -> dict:
+    out = {}
+    # flash attention (prefill-shaped)
+    q, k, v = arr(2, 256, 8, 64), arr(2, 256, 2, 64), arr(2, 256, 2, 64)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.flash_attention(q, k, v, impl="xla")))
+    emit("kernel_flash_attention_xla_b2s256h8", us, "prefill GQA 4:1")
+    out["flash_us"] = us
+
+    # decode attention
+    qd, kc, vc = arr(8, 8, 64), arr(8, 2048, 2, 64), arr(8, 2048, 2, 64)
+    lens = jnp.full((8,), 2048, jnp.int32)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.decode_attention(qd, kc, vc, lens, impl="xla")))
+    emit("kernel_decode_attention_xla_b8s2048", us, "decode GQA cache 2k")
+    out["decode_us"] = us
+
+    # ssm scan
+    u, dt = arr(2, 512, 128), jnp.abs(arr(2, 512, 128)) * 0.1
+    a = -jnp.abs(arr(128, 16))
+    bm, cm, dv = arr(2, 512, 16), arr(2, 512, 16), arr(128)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.ssm_scan(u, dt, a, bm, cm, dv, impl="xla")))
+    emit("kernel_ssm_scan_xla_l512d128", us, "selective scan")
+    out["ssm_us"] = us
+
+    # rmsnorm
+    x, sc = arr(8, 1024, 512), arr(512)
+    _, us = timed(lambda: jax.block_until_ready(ops.rmsnorm(x, sc, impl="xla")))
+    emit("kernel_rmsnorm_xla_8x1024x512", us, "fused norm")
+    out["rms_us"] = us
+
+    # interpret-mode equivalence spot check (the real kernel body)
+    qs, ks, vs = arr(1, 32, 4, 32), arr(1, 32, 2, 32), arr(1, 32, 2, 32)
+    got = ops.flash_attention(qs, ks, vs, impl="interpret", block_q=8, block_k=8)
+    want = ref.attention(qs, ks, vs)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernel_flash_attention_interpret_check", 0.0, f"max_err={err:.2e}")
+    out["interpret_err"] = err
+    return out
+
+
+if __name__ == "__main__":
+    run()

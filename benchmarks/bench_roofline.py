@@ -1,0 +1,70 @@
+"""Roofline table readout: aggregates results/dryrun/*.json into the
+EXPERIMENTS.md §Roofline table (per arch x shape x mesh: three terms,
+dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit, save_csv
+
+DRYRUN_DIR = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+
+
+def load_records(opt_level: str | None = None):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        if opt_level and not path.endswith(f"__{opt_level}.json"):
+            continue
+        recs.append(rec)
+    return recs
+
+
+def table_rows(recs):
+    rows = []
+    for rec in recs:
+        if rec.get("status") != "ok":
+            rows.append((rec["arch"], rec["shape"], rec["mesh"],
+                         rec.get("status"), rec.get("reason", rec.get("error", ""))[:60],
+                         "", "", "", "", ""))
+            continue
+        rf = rec["roofline"]
+        rows.append((
+            rec["arch"], rec["shape"], rec["mesh"], "ok",
+            f"{rf['compute_s'] * 1e3:.2f}",
+            f"{rf['memory_s'] * 1e3:.2f}",
+            f"{rf['collective_s'] * 1e3:.2f}",
+            rf["dominant"],
+            f"{rf['useful_ratio']:.3f}",
+            f"{rf['peak_memory_bytes'] / 2 ** 30:.2f}",
+        ))
+    return rows
+
+
+def run() -> dict:
+    header = ["arch", "shape", "mesh", "status", "compute_ms", "memory_ms",
+              "collective_ms", "dominant", "useful_ratio", "peak_GiB"]
+    out = {}
+    for level in ("baseline", "perf"):
+        recs = load_records(level)
+        if not recs:
+            continue
+        rows = table_rows(recs)
+        path = save_csv(f"roofline_{level}", header, rows)
+        ok = [r for r in rows if r[3] == "ok"]
+        dominant = {}
+        for r in ok:
+            dominant[r[7]] = dominant.get(r[7], 0) + 1
+        emit(f"roofline_{level}", 0.0,
+             f"{len(ok)} cells ok; dominant terms: {dominant}; -> {path}")
+        out[level] = {"cells": len(ok), "dominant": dominant}
+    if not out:
+        emit("roofline", 0.0, "no dryrun records found — run repro.launch.dryrun")
+    return out
+
+
+if __name__ == "__main__":
+    run()

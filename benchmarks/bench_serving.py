@@ -1,0 +1,52 @@
+"""Serving-engine benchmark: throughput/latency of the chain scheduler with
+adaptive vs fixed chain length (the paper's core serving trade-off at the
+engine level — complements Fig. 4's sim-level comparison)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_csv
+from repro.serving import EngineConfig, NodeExecutor, NodeSpec, Request, ServingEngine
+
+
+def _mk_engine(early_exit: bool, nodes: int = 4, capacity: int = 2):
+    def block_fn(state, block_idx):
+        return state, min(0.28 * (block_idx + 1), 1.0)
+
+    execs = [NodeExecutor(NodeSpec(i, capacity, 1.0 + 0.5 * i), {0: block_fn})
+             for i in range(nodes)]
+    y = np.abs(np.arange(nodes)[:, None] - np.arange(nodes)[None, :]) * 0.2
+    return ServingEngine(execs, EngineConfig(max_blocks=4, early_exit=early_exit), y)
+
+
+def run(requests: int = 200, frames: int = 120) -> dict:
+    rng = np.random.default_rng(0)
+    rows = []
+    out = {}
+    for early in (True, False):
+        eng = _mk_engine(early)
+        for rid in range(requests):
+            eng.submit(Request(rid=rid, service=0, arrival_frame=0,
+                               quality_threshold=float(rng.uniform(0.1, 0.5)),
+                               state={}))
+        t0 = time.perf_counter()
+        stats = eng.run(frames)
+        us = (time.perf_counter() - t0) * 1e6 / frames
+        rows.append(("adaptive" if early else "fixed", stats["completed"],
+                     round(stats["mean_quality"], 3),
+                     round(stats["mean_latency_frames"], 2),
+                     round(stats["p95_latency_frames"], 2),
+                     round(stats["objective"], 2)))
+        emit(f"serving_{'adaptive' if early else 'fixed'}_chain", us,
+             f"completed={stats['completed']} q={stats['mean_quality']:.3f} "
+             f"lat={stats['mean_latency_frames']:.1f}f obj={stats['objective']:.1f}")
+        out["adaptive" if early else "fixed"] = stats
+    save_csv("serving_engine", ["mode", "completed", "mean_q", "mean_lat",
+                                "p95_lat", "objective"], rows)
+    return out
+
+
+if __name__ == "__main__":
+    run()

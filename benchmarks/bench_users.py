@@ -1,0 +1,56 @@
+"""Paper Fig. 4A: performance vs number of UEs for LEARN-GDM / MP / FP / GR
+/ OPT.  The D3QL-based methods share one briefly-trained agent per setting
+(scaled training); OPT is the full-knowledge upper bound.  The paper's
+qualitative claims checked here: LEARN-GDM >= MP, FP, GR under load and
+everything <= OPT.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_csv, scaled
+from repro.core import GreedyController, LearnGDMController, opt_upper_bound
+from repro.sim import EdgeSimulator, SimConfig
+
+
+def _train_variant(cfg: SimConfig, variant: str, episodes: int, seed: int = 0):
+    ctrl = LearnGDMController(EdgeSimulator(cfg), variant=variant, seed=seed)
+    frames = max(episodes * cfg.horizon, 1)
+    ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(5e-2) / frames))
+    ctrl.train(episodes)
+    return ctrl
+
+
+def run(ue_counts=(5, 10, 15, 20, 25), eval_eps: int = 5) -> dict:
+    train_eps = scaled(120, lo=25)
+    rows = []
+    summary = {}
+    t0 = time.time()
+    for u in ue_counts:
+        cfg = SimConfig(num_ues=int(u), num_channels=2, horizon=40, seed=0)
+        point = {}
+        for variant in ("learn-gdm", "mp", "fp"):
+            ctrl = _train_variant(cfg, variant, train_eps)
+            point[variant] = ctrl.evaluate(eval_eps)["reward"]
+        env = EdgeSimulator(cfg)
+        point["gr"] = GreedyController(env).evaluate(eval_eps)["reward"]
+        point["opt"] = float(np.mean(
+            [opt_upper_bound(env, seed=9_000 + e)["reward"]
+             for e in range(eval_eps)]))
+        rows.append((u, point["learn-gdm"], point["mp"], point["fp"],
+                     point["gr"], point["opt"]))
+        summary[u] = point
+    wall = time.time() - t0
+    save_csv("fig4a_users", ["num_ues", "learn_gdm", "mp", "fp", "gr", "opt"],
+             rows)
+    last = rows[-1]
+    emit("fig4a_users", wall * 1e6 / max(len(rows), 1),
+         f"U={last[0]}: learn-gdm={last[1]:.1f} mp={last[2]:.1f} "
+         f"fp={last[3]:.1f} gr={last[4]:.1f} opt={last[5]:.1f}")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Shared benchmark plumbing: CSV emit + scale control.
+
+``REPRO_BENCH_SCALE`` (default 1.0) scales episode counts so CI runs in
+minutes while a full run reproduces paper-scale curves (scale 25 ~ the
+paper's 5,000-episode Fig. 3)."""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Iterable
+
+SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
+RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+
+def scaled(n: int, lo: int = 1) -> int:
+    return max(lo, int(n * SCALE))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+def timed(fn: Callable, *args, repeats: int = 3, **kw):
+    fn(*args, **kw)                       # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+    dt = (time.perf_counter() - t0) / repeats
+    return out, dt * 1e6
+
+
+def save_csv(name: str, header: Iterable[str], rows: Iterable[Iterable]) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, name + ".csv")
+    with open(path, "w") as f:
+        f.write(",".join(map(str, header)) + "\n")
+        for row in rows:
+            f.write(",".join(str(x) for x in row) + "\n")
+    return path

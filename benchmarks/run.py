@@ -1,0 +1,43 @@
+"""Benchmark harness — one entry per paper table/figure + system benches.
+
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Scale with REPRO_BENCH_SCALE (1.0 default ~ minutes; 25 ~ paper scale).
+
+  python -m benchmarks.run                # everything
+  python -m benchmarks.run fig3 kernels   # subset
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+BENCHES = {
+    "fig3": ("benchmarks.bench_convergence", "Fig. 3 reward/MSE convergence"),
+    "fig4a": ("benchmarks.bench_users", "Fig. 4A quality vs #UEs"),
+    "fig4b": ("benchmarks.bench_channels", "Fig. 4B quality vs #channels"),
+    "kernels": ("benchmarks.bench_kernels", "Pallas kernel micro-bench"),
+    "serving": ("benchmarks.bench_serving", "serving engine adaptive-vs-fixed"),
+    "roofline": ("benchmarks.bench_roofline", "dry-run roofline table readout"),
+}
+
+
+def main() -> None:
+    names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(BENCHES)
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        mod_name, desc = BENCHES[name]
+        try:
+            mod = __import__(mod_name, fromlist=["run"])
+            mod.run()
+        except Exception as e:                                # noqa: BLE001
+            failures += 1
+            print(f"{name},nan,ERROR {type(e).__name__}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{failures} benchmark(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Train the D3QL placement agent (paper Fig. 3) and dump the curves.
+
+Run:  PYTHONPATH=src python examples/train_agent.py [--episodes 300]
+"""
+import argparse
+
+import numpy as np
+
+from repro.core import LearnGDMController
+from repro.sim import EdgeSimulator, SimConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--episodes", type=int, default=300)
+    ap.add_argument("--ues", type=int, default=15)
+    ap.add_argument("--channels", type=int, default=2)
+    ap.add_argument("--out", default="results/train_agent_curve.csv")
+    args = ap.parse_args()
+
+    cfg = SimConfig(num_ues=args.ues, num_channels=args.channels,
+                    horizon=40, seed=0)
+    ctrl = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm", seed=0)
+    frames = args.episodes * cfg.horizon
+    ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(1e-2) / frames))
+
+    hist = ctrl.train(args.episodes, log_every=max(args.episodes // 10, 1))
+
+    import os
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as f:
+        f.write("episode,reward,mse_loss\n")
+        for i, (r, l) in enumerate(zip(hist["reward"], hist["loss"])):
+            f.write(f"{i},{r},{l}\n")
+    w = max(args.episodes // 10, 1)
+    print(f"reward: first {w} eps mean {np.mean(hist['reward'][:w]):.2f} -> "
+          f"last {w} eps mean {np.mean(hist['reward'][-w:]):.2f}")
+    print(f"curves -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+from repro.configs.base import (  # noqa: F401
+    DECODE_32K,
+    LONG_500K,
+    MULTI_POD,
+    PREFILL_32K,
+    SHAPES,
+    SINGLE_POD,
+    TRAIN_4K,
+    MambaConfig,
+    MeshConfig,
+    ModelConfig,
+    ServeConfig,
+    ShapeConfig,
+    TrainConfig,
+    XLSTMConfig,
+)
+from repro.configs.registry import (  # noqa: F401
+    ALL_ARCHS,
+    ASSIGNED_ARCHS,
+    cell_supported,
+    get_config,
+    get_shape,
+    grid_cells,
+)

@@ -1,0 +1,22 @@
+"""The paper's own GDM service: a DiT-style latent denoiser with B blocks.
+
+Stable-Diffusion-class latent denoiser adapted to TPU as a DiT (transformer
+over latent patches + timestep/prompt conditioning).  A "block" in the paper
+(one scheduling quantum, Table II: B=4) is ``steps_per_block`` denoise steps;
+quality Omega(k) is measured by the SSIM proxy in repro/models/gdm.py.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gdm-dit",
+    family="gdm",
+    num_layers=12,
+    d_model=768,
+    num_heads=12,
+    num_kv_heads=12,
+    head_dim=64,
+    d_ff=3072,
+    vocab_size=49_408,        # prompt token vocab (CLIP-style)
+    gdm_blocks=4,             # B in the paper (Table II)
+    latent_hw=16,             # 16x16 latent patch grid
+)

@@ -1,0 +1,26 @@
+"""jamba-v0.1-52b — 32L d4096 32H (GQA kv=8) d_ff=14336, Mamba+attn 1:7, MoE 16e top-2.
+
+[arXiv:2403.19887]  One attention layer per 8 (attn_every=8); MoE MLP every
+second layer (moe_every=2); remaining layers dense MLP; non-attention layers
+are Mamba selective-SSM blocks.  Hybrid -> sub-quadratic, runs long_500k.
+"""
+from repro.configs.base import MambaConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b",
+    family="hybrid",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    moe_d_ff=14_336,
+    vocab_size=65_536,
+    num_experts=16,
+    experts_per_token=2,
+    moe_every=2,
+    attn_every=8,
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    subquadratic=True,
+)

@@ -1,0 +1,22 @@
+"""llava-next-34b — 60L d7168 56H (GQA kv=8) d_ff=20480 vocab 64000 (anyres VLM).
+
+[hf:llava-hf/llava-v1.6 family]  Vision frontend is a STUB per the
+assignment: ``input_specs()`` provides ``num_patch_tokens`` precomputed patch
+embeddings (anyres tiling happens upstream); the backbone consumes them
+prepended to the text sequence.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=20_480,
+    vocab_size=64_000,
+    num_patch_tokens=2_880,   # 5 anyres tiles x 576 patches
+    frontend="image_patches",
+)

@@ -1,0 +1,20 @@
+"""qwen1.5-4b — 40L d2560 20H (MHA kv=20) d_ff=6912 vocab 151936, QKV bias.
+
+[hf:Qwen/Qwen1.5-0.5B family]  num_heads=20 is NOT divisible by tp=16: the
+sharding policy falls back to sequence-sharded attention (context parallelism)
+for this arch — see repro/distributed/sharding.py.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-4b",
+    family="dense",
+    num_layers=40,
+    d_model=2560,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=128,
+    d_ff=6912,
+    vocab_size=151_936,
+    qkv_bias=True,
+)

@@ -1,0 +1,24 @@
+"""qwen3-moe-235b-a22b — 94L d4096 64H (GQA kv=4) MoE 128e top-8, moe_d_ff=1536.
+
+[hf:Qwen/Qwen3-30B-A3B family scaled per assignment; head_dim=128 explicit as
+in Qwen3 configs (64H x 128 != d_model).]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,                # assignment lists d_ff=1536 == per-expert hidden
+    moe_d_ff=1536,
+    vocab_size=151_936,
+    num_experts=128,
+    experts_per_token=8,
+    moe_every=1,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)

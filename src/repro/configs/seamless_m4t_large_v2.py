@@ -1,0 +1,26 @@
+"""seamless-m4t-large-v2 — enc-dec 24L d1024 16H (kv=16) d_ff=8192 vocab 256206.
+
+[arXiv:2308.11596] Multimodal (speech/text) encoder-decoder.  Per the
+assignment the modality frontend is a STUB: ``input_specs()`` provides
+precomputed audio-frame embeddings of length ``encoder_seq_len`` as encoder
+memory; the transformer backbone (24 encoder + 24 decoder layers, matching the
+HF config's per-stack depth) is what we build.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-large-v2",
+    family="audio",
+    num_layers=24,            # decoder stack
+    encoder_layers=24,        # encoder stack (audio-frame embeddings stub)
+    cross_attention=True,
+    encoder_seq_len=1024,     # stub: precomputed speech frame embeddings
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=64,
+    d_ff=8192,
+    vocab_size=256_206,       # padded to 256_256 internally
+    frontend="audio_frames",
+    tie_embeddings=False,
+)

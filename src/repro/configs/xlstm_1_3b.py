@@ -1,0 +1,20 @@
+"""xlstm-1.3b — 48L d2048 4H d_ff=0 vocab 50304, sLSTM + mLSTM blocks (7:1).
+
+[arXiv:2405.04517]  d_ff=0: xLSTM blocks carry their own up/down projections
+(proj_factor=2).  Recurrent state -> sub-quadratic, runs long_500k.
+"""
+from repro.configs.base import ModelConfig, XLSTMConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    head_dim=512,
+    d_ff=0,
+    vocab_size=50_304,
+    xlstm=XLSTMConfig(slstm_every=8, proj_factor=2.0, conv_kernel=4),
+    subquadratic=True,
+)

@@ -1,0 +1,15 @@
+"""yi-6b — 32L d4096 32H (GQA kv=4) d_ff=11008 vocab 64000. [arXiv:2403.04652]"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=11_008,
+    vocab_size=64_000,
+    rope_theta=5_000_000.0,
+)

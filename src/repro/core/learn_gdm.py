@@ -1,0 +1,163 @@
+"""LEARN-GDM (Algorithm 1) and its D3QL-based variants MP / FP.
+
+One controller class drives all three methods; the difference is purely the
+*action mask* applied to the per-UE argmax:
+
+  * LEARN-GDM  — unrestricted: any node each block (distributed chains) and
+                 the null action any time (adaptive chain length).
+  * MP         — monolithic: once a chain starts on node n, the mask allows
+                 only {null, n} (single node per inference, variable length).
+  * FP         — fixed chain: the null action is masked out while
+                 0 < k < B (no early exit; nodes may still vary).
+
+The controller owns the greedy MAC, the observation history (eq. 7), reward
+bookkeeping (eq. 8 — computed by the env), the replay/train plumbing
+(Algorithm 1 steps 23–28), and optional trace recording for the C1–C9
+checkers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.constraints import TraceRecorder
+from repro.core.mac import greedy_mac, random_access
+from repro.rl.d3ql import D3QLAgent, D3QLConfig
+from repro.sim.env import IDLE, EdgeSimulator, SimConfig
+
+
+@dataclasses.dataclass
+class EpisodeStats:
+    reward: float
+    quality_gain: float
+    exec_cost: float
+    trans_cost: float
+    delivered_quality: float
+    num_delivered: int
+    collisions: int
+    losses: List[float]
+
+
+class LearnGDMController:
+    """Algorithm 1 driver.  ``variant`` in {"learn-gdm", "mp", "fp"}."""
+
+    def __init__(self, env: EdgeSimulator, *, variant: str = "learn-gdm",
+                 agent: Optional[D3QLAgent] = None, seed: int = 0,
+                 mac_scheme: str = "greedy"):
+        assert variant in ("learn-gdm", "mp", "fp")
+        self.env = env
+        self.variant = variant
+        self.mac_scheme = mac_scheme
+        cfg = env.cfg
+        self.agent = agent or D3QLAgent(D3QLConfig(
+            obs_dim=env.obs_dim,
+            num_ues=cfg.num_ues,
+            num_actions=cfg.num_bs + 1,
+            seed=seed))
+        self.history: deque = deque(maxlen=self.agent.cfg.history)
+
+    # -- action masking ------------------------------------------------------
+
+    def action_mask(self) -> np.ndarray:
+        env, cfg = self.env, self.env.cfg
+        u, a = cfg.num_ues, cfg.num_bs + 1
+        mask = np.ones((u, a), dtype=bool)
+        if self.variant == "mp":
+            started = env.blocks_done > 0
+            for i in np.where(started)[0]:
+                mask[i, :] = False
+                mask[i, 0] = True                       # null (stop & deliver)
+                mask[i, env.cur_node[i] + 1] = True     # stay on the same node
+        elif self.variant == "fp":
+            mid_chain = (env.blocks_done > 0) & (env.blocks_done < cfg.max_blocks)
+            mask[mid_chain, 0] = False                  # no early exit
+        return mask
+
+    # -- episode loops ---------------------------------------------------------
+
+    def _obs_hist(self) -> np.ndarray:
+        h = self.agent.cfg.history
+        pads = [self.history[0]] * (h - len(self.history)) if self.history \
+            else [np.zeros(self.env.obs_dim, np.float32)] * h
+        items = list(pads) + list(self.history)
+        return np.stack(items[-h:], axis=0)
+
+    def run_episode(self, *, train: bool = True, seed: Optional[int] = None,
+                    trace: Optional[TraceRecorder] = None) -> EpisodeStats:
+        env, agent = self.env, self.agent
+        env.reset(seed=seed)
+        self.history.clear()
+        self.history.append(env.observation())
+        total = dict(reward=0.0, quality_gain=0.0, exec_cost=0.0, trans_cost=0.0)
+        losses: List[float] = []
+        done = False
+        while not done:
+            obs_hist = self._obs_hist()
+            mac = greedy_mac(env) if self.mac_scheme == "greedy" \
+                else random_access(env)
+            blocks_before = env.blocks_done.copy()
+            startable = env.chain_state != IDLE
+            poa_before = env.poa.copy()
+            actions = agent.act(obs_hist, greedy=not train,
+                                mask=self.action_mask())
+            placement = actions.astype(int) - 1          # 0 -> null (-1)
+            res = env.step(mac, placement)
+            done = res["done"]
+            self.history.append(env.observation(res["bs_load"]))
+            if train:
+                agent.remember(obs_hist, actions, res["reward"],
+                               self._obs_hist(), done)
+                loss = agent.train_step()
+                if loss is not None:
+                    losses.append(loss)
+                agent.decay_epsilon()
+            if trace is not None:
+                executed = env.blocks_done > blocks_before
+                trace.add(frame=env.frame - 1, poa=poa_before, mac=mac,
+                          uploaded=res["uploaded"], placement=placement,
+                          executed=executed,
+                          exec_node=np.where(executed, env.cur_node, -1),
+                          blocks_done=env.blocks_done.copy(),
+                          bs_load=res["bs_load"],
+                          chain_startable=startable)
+            for k in total:
+                total[k] += res[k] if k != "reward" else res["reward"]
+        return EpisodeStats(
+            reward=total["reward"], quality_gain=total["quality_gain"],
+            exec_cost=total["exec_cost"], trans_cost=total["trans_cost"],
+            delivered_quality=env.total_delivered,
+            num_delivered=env.num_delivered,
+            collisions=env.num_collisions, losses=losses)
+
+    def train(self, episodes: int, *, log_every: int = 0) -> Dict[str, list]:
+        hist = {"reward": [], "loss": [], "delivered": []}
+        for ep in range(episodes):
+            stats = self.run_episode(train=True, seed=1_000 + ep)
+            hist["reward"].append(stats.reward)
+            hist["loss"].append(float(np.mean(stats.losses)) if stats.losses else np.nan)
+            hist["delivered"].append(stats.delivered_quality)
+            if log_every and (ep + 1) % log_every == 0:
+                recent = np.mean(hist["reward"][-log_every:])
+                print(f"  ep {ep + 1:5d}  reward(avg {log_every})={recent:8.3f}  "
+                      f"eps={self.agent.epsilon:.3f}")
+        return hist
+
+    def evaluate(self, episodes: int, *, seed0: int = 9_000) -> Dict[str, float]:
+        stats = [self.run_episode(train=False, seed=seed0 + ep)
+                 for ep in range(episodes)]
+        return summarize(stats)
+
+
+def summarize(stats: List[EpisodeStats]) -> Dict[str, float]:
+    return {
+        "reward": float(np.mean([s.reward for s in stats])),
+        "quality_gain": float(np.mean([s.quality_gain for s in stats])),
+        "delivered_quality": float(np.mean([s.delivered_quality for s in stats])),
+        "num_delivered": float(np.mean([s.num_delivered for s in stats])),
+        "exec_cost": float(np.mean([s.exec_cost for s in stats])),
+        "trans_cost": float(np.mean([s.trans_cost for s in stats])),
+        "collisions": float(np.mean([s.collisions for s in stats])),
+    }

@@ -1,0 +1,42 @@
+"""Multiple access schemes (paper §III, Algorithm 1 lines 4–8).
+
+The greedy MAC sorts UEs by priority max{1/(Qbar - Q), 1e-8} — UEs whose
+ongoing inference is *closest below* the quality threshold first — and
+assigns the C channels per BS (respecting C5, so controller-scheduled
+transmissions never collide; scarcity shows up as fewer grants per frame).
+A RandomAccess scheme (UEs pick channels independently) is provided for the
+collision ablation.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.sim.env import EdgeSimulator
+
+
+def greedy_mac(env: EdgeSimulator) -> np.ndarray:
+    """Returns (U,) channel assignment in [0, C) or -1 (silent)."""
+    cfg = env.cfg
+    mac = np.full(cfg.num_ues, -1, dtype=int)
+    need = env.needs_uplink()
+    if not need.any():
+        return mac
+    pr = env._priorities()
+    for bs in np.unique(env.poa[need]):
+        ues = np.where(need & (env.poa == bs))[0]
+        ues = ues[np.argsort(-pr[ues])]
+        for c, i in enumerate(ues[:cfg.num_channels]):
+            mac[i] = c
+    return mac
+
+
+def random_access(env: EdgeSimulator, *, attempt_prob: float = 0.8,
+                  rng: np.random.Generator | None = None) -> np.ndarray:
+    """Uncoordinated ALOHA-style access — collisions happen (ablation)."""
+    cfg = env.cfg
+    rng = rng or env.rng
+    mac = np.full(cfg.num_ues, -1, dtype=int)
+    need = env.needs_uplink()
+    attempt = need & (rng.random(cfg.num_ues) < attempt_prob)
+    mac[attempt] = rng.integers(0, cfg.num_channels, size=int(attempt.sum()))
+    return mac

@@ -1,0 +1,1 @@
+from repro.data.pipeline import DataConfig, LatentDataset, TokenDataset, prefetch  # noqa: F401

@@ -1,0 +1,19 @@
+from repro.distributed.roofline import (  # noqa: F401
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    Roofline,
+    analyze,
+    model_flops_estimate,
+    parse_collective_bytes,
+)
+from repro.distributed.sharding import (  # noqa: F401
+    batch_spec,
+    data_axes,
+    decode_state_specs,
+    input_specs_shardings,
+    logits_spec,
+    param_shardings,
+    param_specs,
+    spec_for_shape,
+)

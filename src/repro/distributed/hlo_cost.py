@@ -1,0 +1,442 @@
+"""Trip-count-aware HLO cost model (FLOPs / HBM bytes / collective bytes).
+
+``compiled.cost_analysis()`` sums each HLO op ONCE — but jax.lax.scan lowers
+to ``while`` loops, so a 94-layer scanned transformer reports ~1/94th of its
+real FLOPs.  This module parses the post-optimization, SPMD-partitioned HLO
+text into its computation graph, extracts every while loop's trip count from
+the condition's comparison constant, and accumulates costs recursively:
+
+  FLOPs   — ``dot`` ops: 2 * prod(result dims) * prod(contracting dims)
+            (recursing into fusion bodies, where dots live after fusion);
+            ``convolution``: 2 * prod(result) * prod(kernel spatial) * Cin.
+  bytes   — per top-level op in each computation: operand + result bytes
+            (fusion = its params + result; fusion internals are on-chip,
+            matching XLA's memory model);
+  coll    — ring-model bytes for all-reduce / all-gather / reduce-scatter /
+            all-to-all / collective-permute (see ring factors below).
+
+Everything is per-device (the HLO is the one-device partitioned module).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+# "%name = <shape-or-tuple> opcode(" — opcode may carry suffixes (.1 etc.)
+_OP_LINE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<shape>\([^()]*\)|\S+)\s+"
+    r"(?P<opcode>[a-z][a-z0-9\-]*(?:-start|-done)?)\(")
+_COMP_NAME = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)")
+_TRIP_COUNT = re.compile(r"\"known_trip_count\":\{\"n\":\"(\d+)\"\}")
+_OPERANDS = re.compile(r"%([\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_COND_BODY = re.compile(r"condition=%?([\w\.\-]+),?\s*body=%?([\w\.\-]+)")
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_BRANCHES = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_INT = re.compile(r"[su](?:8|16|32|64)\[\]\s+constant\((\d+)\)")
+_REPLICA = re.compile(r"replica_groups=\[(\d+)[,\]]")
+_REPLICA_IOTA = re.compile(r"replica_groups=\[(\d+)(?:,\d+)*\]<=")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_ZERO_BYTE_OPS = {"parameter", "constant", "get-tuple-element", "tuple",
+                  "bitcast", "bitcast-convert", "after-all", "iota",
+                  "partition-id", "replica-id"}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_TOKEN.finditer(shape_str):
+        d = _DTYPE_BYTES.get(m.group(1))
+        if d is None:
+            continue
+        n = 1
+        dims = m.group(2)
+        if dims:
+            for x in dims.split(","):
+                n *= int(x)
+        total += n * d
+    return total
+
+
+def _shape_dims(shape_str: str) -> List[int]:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(x) for x in dims.split(",")] if dims else []
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes: float = 0.0
+    coll_detail: Dict[str, List[float]] = dataclasses.field(
+        default_factory=dict)   # op -> [count, bytes]
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.coll_bytes += other.coll_bytes * mult
+        for k, (c, b) in other.coll_detail.items():
+            cur = self.coll_detail.setdefault(k, [0.0, 0.0])
+            cur[0] += c * mult
+            cur[1] += b * mult
+
+
+@dataclasses.dataclass
+class _Op:
+    name: str
+    shape: str
+    opcode: str
+    line: str
+
+
+class HLOModule:
+    def __init__(self, text: str):
+        self.comps: Dict[str, List[_Op]] = {}
+        self.entry: Optional[str] = None
+        self._parse(text)
+
+    def _parse(self, text: str) -> None:
+        cur: Optional[str] = None
+        for raw in text.splitlines():
+            line = raw.rstrip()
+            stripped = line.strip()
+            if cur is None:
+                # computation header: "<name> (args...) -> result {"
+                # (args may contain nested parens for tuple types)
+                if stripped.endswith("{") and "->" in stripped:
+                    h = _COMP_NAME.match(stripped)
+                    if h:
+                        cur = h.group(1)
+                        self.comps[cur] = []
+                        if stripped.startswith("ENTRY"):
+                            self.entry = cur
+                continue
+            if stripped.startswith("}"):
+                cur = None
+                continue
+            m = _OP_LINE.match(line)
+            if m:
+                self.comps[cur].append(
+                    _Op(m.group("name"), m.group("shape"), m.group("opcode"),
+                        stripped))
+
+    # -- helpers -------------------------------------------------------------
+
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        return {op.name: op.shape for op in self.comps.get(comp, [])}
+
+    def _trip_count(self, cond_comp: str) -> int:
+        consts = []
+        for op in self.comps.get(cond_comp, []):
+            consts += [int(c) for c in _CONST_INT.findall(op.line)]
+        return max(consts) if consts else 1
+
+    # -- cost ----------------------------------------------------------------
+
+    def cost(self, comp: Optional[str] = None, *, _depth: int = 0,
+             _memo: Optional[Dict[str, Cost]] = None,
+             count_bytes: bool = True) -> Cost:
+        comp = comp or self.entry or (next(iter(self.comps)) if self.comps else None)
+        if comp is None:
+            return Cost()
+        _memo = {} if _memo is None else _memo
+        key = (comp, count_bytes)
+        if key in _memo:
+            return _memo[key]
+        if _depth > 64:
+            return Cost()
+        total = Cost()
+        syms = self._symbols(comp)
+        for op in self.comps.get(comp, []):
+            oc = op.opcode
+            # ---- control flow ----
+            if oc == "while":
+                m = _COND_BODY.search(op.line)
+                if m:
+                    tc = _TRIP_COUNT.search(op.line)
+                    trips = int(tc.group(1)) if tc else self._trip_count(m.group(1))
+                    body = self.cost(m.group(2), _depth=_depth + 1, _memo=_memo,
+                                     count_bytes=count_bytes)
+                    total.add(body, trips)
+                continue
+            if oc == "conditional":
+                m = _BRANCHES.search(op.line)
+                if m:
+                    branches = [b.strip().lstrip("%") for b in m.group(1).split(",")]
+                    costs = [self.cost(b, _depth=_depth + 1, _memo=_memo,
+                                       count_bytes=count_bytes)
+                             for b in branches]
+                    if costs:   # worst case branch
+                        total.add(max(costs, key=lambda c: c.flops + c.bytes))
+                continue
+            if oc in ("call", "async-start"):
+                m = _CALLS.search(op.line)
+                if m:
+                    total.add(self.cost(m.group(1), _depth=_depth + 1,
+                                        _memo=_memo, count_bytes=count_bytes))
+                continue
+            # ---- collectives ----
+            base = oc[:-6] if oc.endswith("-start") else oc
+            if base in COLLECTIVE_OPS:
+                if oc.endswith("-done"):
+                    continue
+                nbytes = _shape_bytes(op.shape)
+                if oc.endswith("-start"):
+                    nbytes //= 2          # tuple (operand, result)
+                g = self._group(op.line)
+                moved = _ring_bytes(base, nbytes, g)
+                total.coll_bytes += moved
+                det = total.coll_detail.setdefault(base, [0.0, 0.0])
+                det[0] += 1
+                det[1] += moved
+                if count_bytes:
+                    total.bytes += nbytes  # collectives also touch HBM
+                continue
+            # ---- fusion: recurse for FLOPs only (internals stay on-chip) ----
+            if oc == "fusion":
+                m = _CALLS.search(op.line)
+                if m:
+                    inner = self.cost(m.group(1), _depth=_depth + 1,
+                                      _memo=_memo, count_bytes=False)
+                    total.flops += inner.flops
+                    total.coll_bytes += inner.coll_bytes
+                if count_bytes:
+                    total.bytes += self._fusion_bytes(op, syms,
+                                                      m.group(1) if m else None)
+                continue
+            # ---- dots / convs ----
+            if oc == "dot":
+                total.flops += self._dot_flops(op, syms)
+            elif oc == "convolution":
+                total.flops += self._conv_flops(op, syms)
+            # ---- bytes ----
+            if count_bytes and oc not in _ZERO_BYTE_OPS:
+                if oc == "dynamic-update-slice":
+                    # in-place update (donated buffers): traffic = the
+                    # written region (read update + write region), NOT the
+                    # whole target buffer — XLA emits these in place.
+                    total.bytes += 2.0 * self._dus_update_bytes(op, syms)
+                else:
+                    total.bytes += self._op_bytes(op, syms)
+        _memo[key] = total
+        return total
+
+    def _op_bytes(self, op: _Op, syms: Dict[str, str]) -> float:
+        nbytes = _shape_bytes(op.shape)
+        paren = op.line.find("(")
+        close = op.line.find(")", paren)
+        arg_str = op.line[paren + 1:close if close > paren else None]
+        for name in _OPERANDS.findall(arg_str):
+            if name in syms:
+                nbytes += _shape_bytes(syms[name])
+        return float(nbytes)
+
+    def _fusion_bytes(self, op: _Op, syms: Dict[str, str],
+                      called: Optional[str]) -> float:
+        """TPU-model HBM bytes of a fusion: consumer-aware parameter charges.
+
+        * a parameter consumed ONLY by slice/dynamic-slice/gather ops reads
+          just the sliced region (scan xs slicing, embedding gathers);
+        * a parameter that flows (through converts) into operand 0 of a
+          dynamic-update-slice that forms the fusion root is an IN-PLACE
+          update target (XLA aliases it on TPU; the f32 round-trips seen on
+          the CPU backend are bf16 legalization artifacts) — charge the
+          written region instead of the buffer, and do not charge the
+          result;
+        * everything else is charged in full (reductions etc. really read
+          their operands).
+        """
+        if called is None or called not in self.comps:
+            return self._op_bytes(op, syms)
+        inner = self.comps[called]
+        by_name = {o.name: o for o in inner}
+        param_idx: Dict[str, int] = {}
+        for o in inner:
+            if o.opcode == "parameter":
+                mm = re.search(r"parameter\((\d+)\)", o.line)
+                if mm:
+                    param_idx[o.name] = int(mm.group(1))
+
+        # forward map: name -> set of (consumer op, operand position)
+        consumers: Dict[str, List[Tuple[_Op, int]]] = {}
+        for o in inner:
+            if o.opcode == "parameter":
+                continue
+            paren = o.line.find("(")
+            close = o.line.find(")", paren)
+            for pos_i, nm in enumerate(_OPERANDS.findall(o.line[paren + 1:close])):
+                consumers.setdefault(nm, []).append((o, pos_i))
+
+        def resolve_alias(nm: str) -> str:
+            """Follow single-consumer convert/bitcast chains forward."""
+            seen = 0
+            while seen < 8:
+                cons = consumers.get(nm, [])
+                if len(cons) == 1 and cons[0][0].opcode in ("convert", "bitcast",
+                                                            "copy"):
+                    nm = cons[0][0].name
+                    seen += 1
+                    continue
+                return nm
+            return nm
+
+        slice_ops = ("slice", "dynamic-slice", "gather")
+        charges: Dict[int, float] = {}
+        inplace_result = False
+        dus_updates = 0.0
+        for pname, idx in param_idx.items():
+            nm = resolve_alias(pname)
+            cons = consumers.get(nm, [])
+            if not cons:
+                charges[idx] = 0.0
+                continue
+            full = float(_shape_bytes(by_name[pname].shape)) if pname in by_name else 0.0
+            if all(c.opcode in slice_ops and p == 0 for c, p in cons):
+                charges[idx] = max(float(_shape_bytes(c.shape)) for c, _ in cons)
+            elif any(c.opcode == "dynamic-update-slice" and p == 0 for c, p in cons) \
+                    and all(c.opcode in ("dynamic-update-slice",) + slice_ops
+                            for c, _ in cons):
+                # in-place update target
+                dus = [c for c, p in cons if c.opcode == "dynamic-update-slice"][0]
+                paren = dus.line.find("(")
+                close = dus.line.find(")", paren)
+                ops_n = _OPERANDS.findall(dus.line[paren + 1:close])
+                upd = 0.0
+                if len(ops_n) >= 2:
+                    upd_name = ops_n[1]
+                    if upd_name in by_name:
+                        upd = float(_shape_bytes(by_name[upd_name].shape))
+                charges[idx] = 2.0 * upd
+                inplace_result = True
+            else:
+                charges[idx] = full
+
+        total = 0.0 if inplace_result else float(_shape_bytes(op.shape))
+        paren = op.line.find("(")
+        close = op.line.find(")", paren)
+        for i, nm in enumerate(_OPERANDS.findall(op.line[paren + 1:close])):
+            if i in charges:
+                total += charges[i]
+            elif nm in syms:
+                total += float(_shape_bytes(syms[nm]))
+        return total
+
+    def _dus_update_bytes(self, op: _Op, syms: Dict[str, str]) -> float:
+        paren = op.line.find("(")
+        close = op.line.find(")", paren)
+        names = _OPERANDS.findall(op.line[paren + 1:close])
+        if len(names) >= 2 and names[1] in syms:
+            return float(_shape_bytes(syms[names[1]]))
+        return float(_shape_bytes(op.shape))
+
+    def _dot_flops(self, op: _Op, syms: Dict[str, str]) -> float:
+        result_elems = 1
+        for d in _shape_dims(op.shape):
+            result_elems *= d
+        m = _CONTRACT.search(op.line)
+        contract = 1
+        if m:
+            paren = op.line.find("(")
+            close = op.line.find(")", paren)
+            names = _OPERANDS.findall(op.line[paren + 1:close])
+            if names and names[0] in syms:
+                lhs_dims = _shape_dims(syms[names[0]])
+                idxs = m.group(1)
+                if idxs:
+                    for i in idxs.split(","):
+                        i = int(i)
+                        if i < len(lhs_dims):
+                            contract *= lhs_dims[i]
+        return 2.0 * result_elems * contract
+
+    def _conv_flops(self, op: _Op, syms: Dict[str, str]) -> float:
+        # 2 * prod(result) * prod(kernel spatial + input feature) — parse rhs
+        result_elems = 1
+        for d in _shape_dims(op.shape):
+            result_elems *= d
+        paren = op.line.find("(")
+        close = op.line.find(")", paren)
+        names = _OPERANDS.findall(op.line[paren + 1:close])
+        k = 1
+        if len(names) >= 2 and names[1] in syms:
+            kd = _shape_dims(syms[names[1]])
+            for d in kd[:-1]:          # all but output-feature dim
+                k *= d
+        return 2.0 * result_elems * k
+
+    def _group(self, line: str) -> int:
+        m = _REPLICA_IOTA.search(line)
+        if m:
+            return max(int(m.group(1)), 1)
+        m = _REPLICA.search(line)
+        if m:
+            return max(int(m.group(1)), 1)
+        return 2
+
+
+def _ring_bytes(op: str, nbytes: int, g: int) -> float:
+    if op == "all-gather":
+        return nbytes * (g - 1) / g
+    if op == "all-reduce":
+        return 2.0 * nbytes * (g - 1) / g
+    if op == "reduce-scatter":
+        return float(nbytes) * (g - 1)
+    if op == "all-to-all":
+        return nbytes * (g - 1) / g
+    return float(nbytes)
+
+
+def module_cost(hlo_text: str) -> Cost:
+    return HLOModule(hlo_text).cost()
+
+
+def bytes_by_opcode(hlo_text: str, top: int = 15) -> List[Tuple[str, float]]:
+    """Debug profile: per-opcode HBM bytes with loop trip multiplication."""
+    mod = HLOModule(hlo_text)
+    totals: Dict[str, float] = {}
+
+    def walk(comp: str, mult: float, depth: int = 0):
+        if depth > 64 or comp not in mod.comps:
+            return
+        syms = mod._symbols(comp)
+        for op in mod.comps[comp]:
+            oc = op.opcode
+            if oc == "while":
+                m = _COND_BODY.search(op.line)
+                if m:
+                    tc = _TRIP_COUNT.search(op.line)
+                    trips = int(tc.group(1)) if tc else mod._trip_count(m.group(1))
+                    walk(m.group(2), mult * trips, depth + 1)
+                continue
+            if oc in ("call", "async-start"):
+                m = _CALLS.search(op.line)
+                if m:
+                    walk(m.group(1), mult, depth + 1)
+                continue
+            if oc in _ZERO_BYTE_OPS:
+                continue
+            if oc == "fusion":
+                m = _CALLS.search(op.line)
+                b = mod._fusion_bytes(op, syms, m.group(1) if m else None)
+            elif oc == "dynamic-update-slice":
+                b = 2.0 * mod._dus_update_bytes(op, syms)
+            else:
+                b = mod._op_bytes(op, syms)
+            totals[oc] = totals.get(oc, 0.0) + b * mult
+
+    walk(mod.entry or next(iter(mod.comps)), 1.0)
+    return sorted(totals.items(), key=lambda kv: -kv[1])[:top]

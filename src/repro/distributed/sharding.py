@@ -1,0 +1,246 @@
+"""Sharding rules: parameter/optimizer/activation PartitionSpecs per arch.
+
+Policy (DESIGN.md §6):
+  * params: Megatron TP over ``model`` (column-parallel in-projections,
+    row-parallel out-projections), FSDP over ``data`` on the complementary
+    matrix dim, experts over ``model`` (EP) for MoE stacks;
+  * optimizer moments: identical specs (ZeRO-style);
+  * activations: batch over (pod, data); sequence over ``model`` at layer
+    boundaries (SP) for training shapes;
+  * decode KV caches: kv-heads over ``model`` when divisible, else sequence
+    blocks over ``model`` (flash-decoding split-K);
+  * every spec is divisibility-checked against the mesh and degrades to
+    replication on that dim rather than failing (e.g. qwen1.5's 20 heads).
+
+Rules are right-aligned regex -> axis templates, so the leading
+period-stacking dim of scanned layers is handled uniformly.
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+# (path regex, right-aligned axis template) — first match wins.
+# Axis entries: "model" / "data" / ("data","model") / None.
+PARAM_RULES: List[Tuple[str, Tuple]] = [
+    (r"embed/table$",            ("model", "data")),     # (Vpad, d)
+    (r"head/w$",                 ("data", "model")),     # (d, Vpad)
+    (r"patch_proj/w$",           ("data", "model")),
+    (r"frame_proj/w$",           ("data", "model")),
+    # attention
+    (r"attn/wq/w$|attn/wk/w$|attn/wv/w$", ("data", "model")),
+    (r"cross/wq/w$|cross/wk/w$|cross/wv/w$", ("data", "model")),
+    (r"attn/wo/w$|cross/wo/w$",  ("model", "data")),
+    (r"attn/w[qkv]/b$|cross/w[qkv]/b$", ("model",)),
+    (r"attn/wo/b$|cross/wo/b$",  (None,)),
+    # dense MLP
+    (r"mlp/gate/w$|mlp/up/w$",   ("data", "model")),
+    (r"mlp/down/w$",             ("model", "data")),
+    (r"mlp/(up|down|gate)/b$",   (None,)),
+    # MoE: experts over model (EP), FSDP over data on d_model dim
+    (r"moe/router$",             (None, None)),
+    (r"moe/gate_w$|moe/up_w$",   ("model", "data", None)),
+    (r"moe/down_w$",             ("model", None, "data")),
+    # mamba
+    (r"mamba/in_proj/w$",        ("data", "model")),
+    (r"mamba/conv_w$",           (None, "model")),
+    (r"mamba/conv_b$",           ("model",)),
+    (r"mamba/x_proj/w$",         ("model", None)),
+    (r"mamba/dt_proj/w$",        (None, "model")),
+    (r"mamba/dt_proj/b$",        ("model",)),
+    (r"mamba/a_log$",            ("model", None)),
+    (r"mamba/d$",                ("model",)),
+    (r"mamba/out_proj/w$",       ("model", "data")),
+    # xlstm
+    (r"mlstm/up/w$",             ("data", "model")),
+    (r"mlstm/conv_w$",           (None, "model")),
+    (r"mlstm/conv_b$",           ("model",)),
+    (r"mlstm/w[qkv]/w$",         ("data", "model")),
+    (r"mlstm/w_if/w$",           ("model", None)),
+    (r"mlstm/down/w$",           ("model", "data")),
+    (r"slstm/wx/w$",             ("data", "model")),
+    (r"slstm/r$",                (None, None, "model")),
+    (r"slstm/up/w$",             ("data", "model")),
+    (r"slstm/down/w$",           ("model", "data")),
+    # norms & small vectors: replicated
+    (r".*",                      ()),
+]
+
+
+def _path_to_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+        elif hasattr(p, "name"):
+            parts.append(str(p.name))
+        else:
+            parts.append(str(p))
+    return "/".join(parts)
+
+
+def _axis_size(mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _axis_size(mesh, a)
+        return n
+    return mesh.shape[axis]
+
+
+def spec_for_shape(shape: Sequence[int], template: Tuple, mesh) -> P:
+    """Right-align ``template`` onto ``shape`` with divisibility checks."""
+    ndim = len(shape)
+    axes: List = [None] * ndim
+    t = list(template)[-ndim:] if template else []
+    offset = ndim - len(t)
+    for j, axis in enumerate(t):
+        dim = offset + j
+        if axis is None:
+            continue
+        if shape[dim] % _axis_size(mesh, axis) == 0:
+            axes[dim] = axis
+        # else: leave replicated on this dim (divisibility fallback)
+    return P(*axes)
+
+
+def param_specs(params_shape, mesh) -> Any:
+    """PartitionSpec pytree matching a params (shape) pytree."""
+    def assign(path, leaf):
+        pstr = _path_to_str(path)
+        for pattern, template in PARAM_RULES:
+            if re.search(pattern, pstr):
+                return spec_for_shape(leaf.shape, template, mesh)
+        return P()
+    return jax.tree_util.tree_map_with_path(assign, params_shape)
+
+
+def param_shardings(params_shape, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs(params_shape, mesh))
+
+
+# ---------------------------------------------------------------------------
+# Activation / input / state specs
+# ---------------------------------------------------------------------------
+
+def data_axes(mesh) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_spec(mesh, batch: int, extra_dims: int = 1) -> P:
+    """Shard the batch dim over (pod, data) — degrade if indivisible,
+    preferring the largest divisible axis subset."""
+    dp = data_axes(mesh)
+    candidates: List[Tuple[str, ...]] = [dp]
+    candidates += [(a,) for a in sorted(dp, key=lambda a: -_axis_size(mesh, a))]
+    chosen: Tuple[str, ...] = ()
+    for cand in candidates:
+        if cand and batch % _axis_size(mesh, cand) == 0:
+            chosen = cand
+            break
+    first = chosen if chosen else None
+    return P(first, *([None] * extra_dims))
+
+
+def input_specs_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                          *, seq_shard: bool = False) -> Dict[str, Any]:
+    """NamedShardings for the train/prefill batch dict."""
+    b = shape.global_batch
+    out: Dict[str, Any] = {
+        "tokens": NamedSharding(mesh, batch_spec(mesh, b, 1)),
+        "labels": NamedSharding(mesh, batch_spec(mesh, b, 1)),
+    }
+    if cfg.num_patch_tokens:
+        bs = batch_spec(mesh, b, 2)
+        out["patch_embeds"] = NamedSharding(mesh, bs)
+    if cfg.is_encdec:
+        bs = batch_spec(mesh, b, 2)
+        out["enc_frames"] = NamedSharding(mesh, bs)
+    return out
+
+
+def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                       state_shape) -> Any:
+    """Specs for the decode-state pytree (leading dim = periods).
+
+    KV caches (periods, B, S, KH, D): batch over dp when divisible; model
+    axis on kv-heads if divisible, else on the sequence dim (split-K
+    decode).  SSM/recurrent states: model axis on the channel dim.
+    """
+    tp = mesh.shape["model"] if "model" in mesh.axis_names else 1
+    dp = data_axes(mesh)
+    b = shape.global_batch
+
+    def assign(path, leaf):
+        pstr = _path_to_str(path)
+        shp = leaf.shape
+        bdim_ok = b % _axis_size(mesh, dp) == 0 and len(dp) > 0
+        bspec = dp if bdim_ok else None
+        if re.search(r"kv/k$|kv/v$", pstr):
+            # (periods, B, S, KH, D)
+            if shp[3] % tp == 0:
+                return P(None, bspec, None, "model", None)
+            if shp[2] % tp == 0:
+                return P(None, bspec, "model", None, None)
+            return P(None, bspec, None, None, None)
+        if re.search(r"kv/length$", pstr):
+            return P(None, bspec)
+        if re.search(r"mamba/conv$|conv_tail$", pstr):
+            # (periods, B, K-1, d_in): channel dim last
+            axes = [None] * len(shp)
+            axes[1] = bspec
+            if shp[-1] % tp == 0:
+                axes[-1] = "model"
+            return P(*axes)
+        if re.search(r"mamba/ssm$", pstr):
+            # (periods, B, d_in, N): channel dim 2
+            axes = [None] * len(shp)
+            axes[1] = bspec
+            if shp[2] % tp == 0:
+                axes[2] = "model"
+            return P(*axes)
+        if re.search(r"mlstm/(c|n)$", pstr):
+            axes = [None] * len(shp)
+            axes[1] = bspec
+            if shp[-1] % tp == 0:
+                axes[-1] = "model"
+            return P(*axes)
+        if re.search(r"slstm/(h|c|n|m)$", pstr):
+            axes = [None] * len(shp)
+            axes[1] = bspec
+            if shp[-1] % tp == 0:
+                axes[-1] = "model"
+            return P(*axes)
+        # default: batch over dp only
+        axes = [None] * len(shp)
+        if len(shp) > 1:
+            axes[1] = bspec
+        return P(*axes)
+
+    return jax.tree_util.tree_map_with_path(assign, state_shape)
+
+
+def logits_spec(mesh, decode: bool = False, global_batch: int = 0) -> P:
+    """Logits sharding: batch over dp (degraded if indivisible), vocab over
+    model."""
+    if global_batch:
+        b = batch_spec(mesh, global_batch, extra_dims=0)
+        first = b[0] if len(b) else None
+    else:
+        dp = data_axes(mesh)
+        first = dp if dp else None
+    if decode:
+        return P(first, "model")
+    return P(first, None, "model")

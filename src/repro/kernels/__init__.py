@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the compute hot-spots of the serving stack.
+
+The paper's GDM-serving workload is dominated by (a) attention inside the
+denoiser/LM backbones (prefill + decode) and (b) the SSM scans of the hybrid
+and recurrent assigned archs — these get Pallas kernels; everything else is
+plain XLA.  Each kernel ships with a pure-jnp oracle in :mod:`repro.kernels.ref`
+and a jit'd dispatch wrapper in :mod:`repro.kernels.ops`.
+"""
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,108 @@
+"""Flash-decoding Pallas TPU kernel: one query token vs a paged/partial KV cache.
+
+One grid cell handles one (batch, kv-head) pair and streams the cache in
+``block_k`` tiles (innermost sequential grid dim), computing all G = H/KH
+query heads of that kv head together so the MXU sees a (G, bk) matmul.
+Valid cache length comes in via an SMEM scalar per batch row — this is the
+single-token decode hot loop, and the same structure is what the sharded
+flash-decoding (split-K over the model axis + LSE combine) builds on in
+``repro/distributed``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                   scale: float, bk: int):
+    ik = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)                    # (G, d)
+    k = k_ref[0, 0].astype(jnp.float32)                    # (bk, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale  # (G, bk)
+    kpos = ik * bk + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(kpos < len_ref[pl.program_id(0)], s, NEG_INF)
+
+    m_prev = m_scr[:, 0]
+    l_prev = l_scr[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[:, None])
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = jnp.broadcast_to(m_new[:, None], m_scr.shape)
+    l_scr[...] = jnp.broadcast_to(l_new[:, None], l_scr.shape)
+
+    @pl.when(ik == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[:, :1], 1e-30)
+        o_ref[0, 0, ...] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention_pallas(q, k_cache, v_cache, lengths, *,
+                            scale: float | None = None, block_k: int = 256,
+                            interpret: bool = False):
+    """q: (B, H, D); k_cache/v_cache: (B, S, KH, D); lengths: (B,) int32.
+
+    Returns (B, H, D).  Attends to positions [0, lengths[b]).
+    """
+    b, h, d = q.shape
+    _, s, kh, _ = k_cache.shape
+    assert h % kh == 0
+    g = h // kh
+    scale = scale if scale is not None else d ** -0.5
+
+    bk = min(block_k, _ceil_to(s, 8))
+    s_p = _ceil_to(s, bk)
+
+    qg = q.reshape(b, kh, g, d)
+    kt = jnp.moveaxis(k_cache, 2, 1)                       # (B, KH, S, D)
+    vt = jnp.moveaxis(v_cache, 2, 1)
+    if s_p != s:
+        kt = jnp.pad(kt, ((0, 0), (0, 0), (0, s_p - s), (0, 0)))
+        vt = jnp.pad(vt, ((0, 0), (0, 0), (0, s_p - s), (0, 0)))
+
+    grid = (b, kh, s_p // bk)
+    kernel = functools.partial(_decode_kernel, scale=scale, bk=bk)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),  # lengths, sliced below
+            pl.BlockSpec((1, 1, g, d), lambda bb, hh, kk: (bb, hh, 0, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, kk: (bb, hh, kk, 0)),
+            pl.BlockSpec((1, 1, bk, d), lambda bb, hh, kk: (bb, hh, kk, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bb, hh, kk: (bb, hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kh, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, 128), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), qg.reshape(b, kh, g, d), kt, vt)
+    return out.reshape(b, h, d)
+
+
+def _ceil_to(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m

@@ -1,0 +1,43 @@
+"""Fused RMSNorm Pallas TPU kernel (row tiles x full feature dim in VMEM)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, s_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * (var + eps) ** -0.5 * s_ref[...].astype(jnp.float32)
+    o_ref[...] = y.astype(o_ref.dtype)
+
+
+def rmsnorm_pallas(x, scale, *, eps: float = 1e-6, block_rows: int = 256,
+                   interpret: bool = False):
+    """x: (..., D); scale: (D,).  Row-tiled fused RMSNorm."""
+    orig_shape = x.shape
+    d = orig_shape[-1]
+    rows = 1
+    for s in orig_shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    rows_p = ((rows + br - 1) // br) * br
+    if rows_p != rows:
+        x2 = jnp.pad(x2, ((0, rows_p - rows), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(rows_p // br,),
+        in_specs=[
+            pl.BlockSpec((br, d), lambda r: (r, 0)),
+            pl.BlockSpec((1, d), lambda r: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((br, d), lambda r: (r, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale.reshape(1, d))
+    return out[:rows].reshape(orig_shape)

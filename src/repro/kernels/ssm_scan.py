@@ -1,0 +1,90 @@
+"""Chunked selective-scan (Mamba) Pallas TPU kernel.
+
+The recurrence h_t = exp(dt*A) h_{t-1} + dt*B_t u_t, y_t = C_t.h_t + D u_t is
+inherently sequential in t, so the kernel tiles the channel dim (bd block of
+Din — the parallel dim, VPU lanes) and streams time in ``chunk``-length tiles
+(innermost sequential grid dim), carrying the (bd, N) state in VMEM scratch.
+This keeps HBM traffic at one read of (u, dt, B, C) and one write of y — the
+memory-roofline optimum for a memory-bound op — while the time loop inside a
+chunk runs on registers/VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(u_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, o_ref, h_scr, *,
+                chunk: int):
+    il = pl.program_id(2)
+
+    @pl.when(il == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    u = u_ref[0].astype(jnp.float32)                        # (chunk, bd)
+    dt = dt_ref[0].astype(jnp.float32)                      # (chunk, bd)
+    a = a_ref[...].astype(jnp.float32)                      # (bd, N)
+    bmat = b_ref[0].astype(jnp.float32)                     # (chunk, N)
+    cmat = c_ref[0].astype(jnp.float32)                     # (chunk, N)
+    dvec = d_ref[0].astype(jnp.float32)                     # (bd,)
+
+    def step(t, carry):
+        h, yacc = carry
+        u_t = jax.lax.dynamic_slice_in_dim(u, t, 1, 0)[0]       # (bd,)
+        dt_t = jax.lax.dynamic_slice_in_dim(dt, t, 1, 0)[0]     # (bd,)
+        b_t = jax.lax.dynamic_slice_in_dim(bmat, t, 1, 0)[0]    # (N,)
+        c_t = jax.lax.dynamic_slice_in_dim(cmat, t, 1, 0)[0]    # (N,)
+        da = jnp.exp(dt_t[:, None] * a)                         # (bd, N)
+        h = da * h + (dt_t * u_t)[:, None] * b_t[None, :]
+        y_t = jnp.sum(h * c_t[None, :], axis=-1) + dvec * u_t   # (bd,)
+        yacc = jax.lax.dynamic_update_slice_in_dim(yacc, y_t[None], t, 0)
+        return h, yacc
+
+    h0 = h_scr[...]
+    yacc0 = jnp.zeros((chunk, u.shape[1]), jnp.float32)
+    h_final, yacc = jax.lax.fori_loop(0, chunk, step, (h0, yacc0))
+    h_scr[...] = h_final
+    o_ref[0] = yacc.astype(o_ref.dtype)
+
+
+def ssm_scan_pallas(u, delta, a, bmat, cmat, d, *, chunk: int = 64,
+                    block_d: int = 256, interpret: bool = False):
+    """u, delta: (B, L, Din); a: (Din, N); bmat, cmat: (B, L, N); d: (Din,).
+
+    Returns y: (B, L, Din) in u.dtype.  (Final state is not returned by the
+    kernel path; chunk-level state threading at the model level uses the ref
+    implementation — the kernel covers the dominant full-sequence case.)
+    """
+    bsz, length, din = u.shape
+    n = a.shape[-1]
+    chunk = min(chunk, length)
+    bd = min(block_d, din)
+    assert length % chunk == 0, (length, chunk)
+    assert din % bd == 0, (din, bd)
+
+    grid = (bsz, din // bd, length // chunk)
+    kernel = functools.partial(_ssm_kernel, chunk=chunk)
+    d2 = d.reshape(1, din)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, bd), lambda bb, dd, ll: (bb, ll, dd)),
+            pl.BlockSpec((1, chunk, bd), lambda bb, dd, ll: (bb, ll, dd)),
+            pl.BlockSpec((bd, n), lambda bb, dd, ll: (dd, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, dd, ll: (bb, ll, 0)),
+            pl.BlockSpec((1, chunk, n), lambda bb, dd, ll: (bb, ll, 0)),
+            pl.BlockSpec((1, bd), lambda bb, dd, ll: (0, dd)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, bd), lambda bb, dd, ll: (bb, ll, dd)),
+        out_shape=jax.ShapeDtypeStruct((bsz, length, din), u.dtype),
+        scratch_shapes=[pltpu.VMEM((bd, n), jnp.float32)],
+        interpret=interpret,
+    )(u, delta, a, bmat, cmat, d2)
+    return out

@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device
+count at first init); this module is the only place the 512 placeholder
+devices exist — tests and benches see one CPU device.
+
+For every cell this script:
+  1. builds the production mesh ((16,16) or (2,16,16));
+  2. builds abstract params/opt-state/inputs (ShapeDtypeStructs, nothing
+     allocated);
+  3. jits the right step (train_step / prefill_step / serve_step) with
+     explicit in/out shardings and donation;
+  4. ``.lower().compile()`` — a sharding mismatch, an un-partitionable
+     collective, or a compile-time OOM is a FAILURE of our system;
+  5. records memory_analysis / cost_analysis / per-collective bytes / the
+     three roofline terms to results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --all --mesh single --opt-level perf
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (
+    ASSIGNED_ARCHS,
+    SHAPES,
+    TrainConfig,
+    cell_supported,
+    get_config,
+    get_shape,
+    grid_cells,
+)
+from repro.distributed import analyze, model_flops_estimate
+from repro.distributed.sharding import (
+    decode_state_specs,
+    input_specs_shardings,
+    logits_spec,
+    param_shardings,
+    param_specs,
+)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (
+    StepOptions,
+    abstract_opt_state,
+    abstract_params,
+    input_specs,
+    make_prefill_step,
+    make_serve_step,
+    make_train_step,
+)
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+# Perf-pass option sets (see EXPERIMENTS.md §Perf).  "baseline" is the
+# paper-faithful configuration; "perf" adds the beyond-paper levers.
+OPT_LEVELS = {
+    "baseline": StepOptions(seq_shard_carry=False, loss_chunk=0,
+                            fused_position=False, remat=True),
+    "perf": StepOptions(seq_shard_carry=True, loss_chunk=512,
+                        fused_position=True, remat=True, sharded_decode=True),
+    # single-lever variants for the §Perf iteration log
+    "perf-sp": StepOptions(seq_shard_carry=True, fused_position=False),
+    "perf-losschunk": StepOptions(loss_chunk=512, fused_position=False),
+    "perf-fusedpos": StepOptions(fused_position=True),
+    "perf-flashdecode": StepOptions(fused_position=False, sharded_decode=True),
+    "perf-moea2a": StepOptions(fused_position=False, moe_a2a=True),
+    # perf2 = perf + all-to-all EP dispatch (the full beyond-paper stack)
+    "perf2": StepOptions(seq_shard_carry=True, loss_chunk=512,
+                         fused_position=True, remat=True, sharded_decode=True,
+                         moe_a2a=True),
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             opts: StepOptions, dtype=jnp.bfloat16) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    params_shape = abstract_params(cfg, dtype=dtype)
+    p_sh = param_shardings(params_shape, mesh)
+
+    with mesh:
+        if shape.kind == "train":
+            opt_shape = abstract_opt_state(params_shape)
+            o_sh = _opt_shardings(opt_shape, params_shape, mesh)
+            batch_sds = input_specs(cfg, shape, dtype=dtype)
+            b_sh = input_specs_shardings(cfg, shape, mesh)
+            step = make_train_step(cfg, TrainConfig(), opts=opts, mesh=mesh,
+                                   global_batch=shape.global_batch)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1))
+            lowered = jitted.lower(params_shape, opt_shape, batch_sds)
+        elif shape.kind == "prefill":
+            batch_sds = input_specs(cfg, shape, dtype=dtype)
+            b_sh = input_specs_shardings(cfg, shape, mesh)
+            b_sh.pop("labels", None)
+            step = make_prefill_step(cfg, opts=opts, max_seq=shape.seq_len,
+                                     state_dtype=dtype, mesh=mesh,
+                                     global_batch=shape.global_batch)
+            out_state_shape = jax.eval_shape(step, params_shape, batch_sds)
+            out_sh = _prefill_out_shardings(cfg, shape, mesh, out_state_shape)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=out_sh)
+            lowered = jitted.lower(params_shape, batch_sds)
+        else:  # decode / long_decode
+            sds = input_specs(cfg, shape, dtype=dtype)
+            state_specs = decode_state_specs(cfg, shape, mesh, sds["state"])
+            state_sh = jax.tree_util.tree_map(
+                lambda s: NamedSharding(mesh, s), state_specs,
+                is_leaf=lambda x: isinstance(x, P))
+            tok_sh = NamedSharding(mesh, _token_spec(mesh, shape))
+            step = make_serve_step(cfg, opts=opts, mesh=mesh,
+                                   global_batch=shape.global_batch)
+            in_sh = [p_sh, tok_sh, state_sh]
+            args = [params_shape, sds["token"], sds["state"]]
+            if cfg.is_encdec:
+                in_sh.append(NamedSharding(mesh, _memory_spec(mesh, shape)))
+                args.append(sds["memory"])
+            out_sh = (NamedSharding(mesh, logits_spec(
+                mesh, decode=True, global_batch=shape.global_batch)), state_sh)
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             out_shardings=out_sh, donate_argnums=(2,))
+            lowered = jitted.lower(*args)
+
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rf = analyze(compiled, num_devices=mesh.size,
+                 model_flops_global=model_flops_estimate(cfg, shape))
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "multi" if multi_pod else "single",
+        "num_devices": mesh.size,
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "roofline": rf.to_dict(),
+    }
+    return rec
+
+
+def _opt_shardings(opt_shape, params_shape, mesh):
+    """Optimizer moments shard exactly like their parameters (ZeRO-style)."""
+    p_specs = param_specs(params_shape, mesh)
+
+    def like_params(subtree):
+        return jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), p_specs)
+
+    return type(opt_shape)(
+        step=NamedSharding(mesh, P()),
+        mu=like_params(opt_shape.mu) if opt_shape.mu is not None else None,
+        nu=like_params(opt_shape.nu) if opt_shape.nu is not None else None,
+    )
+
+
+def _prefill_out_shardings(cfg, shape, mesh, out_shape):
+    state_specs = decode_state_specs(cfg, shape, mesh, out_shape["state"])
+    out = {
+        "logits": NamedSharding(mesh, logits_spec(
+            mesh, decode=True, global_batch=shape.global_batch)),
+        "state": jax.tree_util.tree_map(
+            lambda s: NamedSharding(mesh, s), state_specs,
+            is_leaf=lambda x: isinstance(x, P)),
+    }
+    if "memory" in out_shape:
+        out["memory"] = NamedSharding(mesh, _memory_spec(mesh, shape))
+    return out
+
+
+def _token_spec(mesh, shape):
+    from repro.distributed.sharding import batch_spec
+    return batch_spec(mesh, shape.global_batch, extra_dims=0)
+
+
+def _memory_spec(mesh, shape):
+    from repro.distributed.sharding import batch_spec
+    return batch_spec(mesh, shape.global_batch, extra_dims=2)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--opt-level", choices=sorted(OPT_LEVELS), default="baseline")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--force", action="store_true", help="recompute existing")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED_ARCHS)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    opts = OPT_LEVELS[args.opt_level]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                tag = f"{arch}__{shape_name}__{'multi' if multi else 'single'}__{args.opt_level}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path) and not args.force:
+                    print(f"[skip-cached] {tag}")
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    rec = run_cell(arch, shape_name, multi_pod=multi, opts=opts)
+                except Exception as e:                      # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape_name,
+                           "mesh": "multi" if multi else "single",
+                           "status": "error", "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1)
+                if rec["status"] == "ok":
+                    rf = rec["roofline"]
+                    print(f"  ok: compile={rec['compile_s']:.1f}s "
+                          f"compute={rf['compute_s']*1e3:.2f}ms "
+                          f"memory={rf['memory_s']*1e3:.2f}ms "
+                          f"collective={rf['collective_s']*1e3:.2f}ms "
+                          f"dominant={rf['dominant']} "
+                          f"peak={rf['peak_memory_bytes']/2**30:.2f}GiB")
+                elif rec["status"] == "skipped":
+                    print(f"  skipped: {rec['reason']}")
+                else:
+                    print(f"  ERROR: {rec['error']}")
+    if failures:
+        raise SystemExit(f"{failures} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Mesh factories for the production topologies.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — the dry-run must set XLA_FLAGS
+before the first jax call, and tests must keep their single CPU device.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import AxisType
+
+from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(16, 16) ("data", "model") single pod; (2, 16, 16) ("pod", "data",
+    "model") across two pods — 256 chips per pod, 512 total."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_mesh_from_config(cfg: MeshConfig):
+    return jax.make_mesh(cfg.shape, cfg.axes,
+                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+
+
+def make_host_mesh(shape: Tuple[int, ...] = (1,),
+                   axes: Tuple[str, ...] = ("data",)):
+    """Tiny mesh over whatever devices exist (tests / CPU examples)."""
+    n = 1
+    for s in shape:
+        n *= s
+    assert n <= len(jax.devices()), (shape, len(jax.devices()))
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def mesh_config(mesh) -> MeshConfig:
+    return MeshConfig(tuple(mesh.devices.shape), tuple(mesh.axis_names))
+
+
+def dp_axes(mesh) -> Tuple[str, ...]:
+    """Axes that carry data parallelism (pod + data)."""
+    names = tuple(mesh.axis_names)
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,224 @@
+"""Jit-ready train / prefill / serve step factories + abstract input specs.
+
+These are the functions the dry-run lowers and the launchers execute.  All
+factories take a :class:`StepOptions` so the perf pass can flip levers
+(sequence-parallel carries, chunked CE loss, fused decode insert, gradient
+accumulation, int8 DP gradient compression) without touching model code.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, TrainConfig
+from repro.distributed.sharding import batch_spec, data_axes
+from repro.models import (
+    init_decode_state,
+    init_lm,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)
+from repro.optim import (
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    compress_grads,
+    cosine_decay,
+    init_error_feedback,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class StepOptions:
+    """Perf levers (baseline = all off; §Perf flips them one by one)."""
+    seq_shard_carry: bool = False    # SP: shard layer-boundary acts over model
+    loss_chunk: int = 0              # chunked CE (0 = off)
+    microbatch: int = 0              # gradient accumulation chunks (0 = off)
+    fused_position: bool = True      # decode cache insert via dynamic slice
+    grad_compression: bool = False   # int8 error-feedback DP all-reduce
+    remat: bool = True
+    impl: str = "auto"               # kernel dispatch
+    sharded_decode: bool = False     # split-K flash-decoding under shard_map
+    moe_a2a: bool = False            # all-to-all EP dispatch under shard_map
+
+
+# ---------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Stand-ins for every model input of the given (arch, shape) cell."""
+    b, s = shape.global_batch, shape.seq_len
+    sds = jax.ShapeDtypeStruct
+    if shape.kind in ("train", "prefill"):
+        specs: Dict[str, Any] = {
+            "tokens": sds((b, s), jnp.int32),
+            "labels": sds((b, s), jnp.int32),
+        }
+        if cfg.num_patch_tokens:
+            specs["patch_embeds"] = sds((b, cfg.num_patch_tokens, cfg.d_model), dtype)
+        if cfg.is_encdec:
+            specs["enc_frames"] = sds((b, cfg.encoder_seq_len, cfg.d_model), dtype)
+        if shape.kind == "prefill":
+            specs.pop("labels")
+        return specs
+    # decode: one token + the (abstract) decode state
+    specs = {"token": sds((b,), jnp.int32)}
+    state = jax.eval_shape(
+        lambda: init_decode_state(cfg, b, s, dtype=dtype))
+    specs["state"] = state
+    if cfg.is_encdec:
+        specs["memory"] = sds((b, cfg.encoder_seq_len, cfg.d_model), dtype)
+    return specs
+
+
+def abstract_params(cfg: ModelConfig, *, dtype=jnp.bfloat16):
+    """Parameter ShapeDtypeStructs via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        functools.partial(init_lm, cfg=cfg, dtype=dtype), jax.random.PRNGKey(0))
+
+
+def abstract_opt_state(params_shape):
+    init_fn, _ = adamw(1e-3)
+    return jax.eval_shape(init_fn, params_shape)
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig, *,
+                    opts: StepOptions = StepOptions(), mesh=None,
+                    global_batch: int = 0):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics)."""
+    lr = cosine_decay(tcfg.learning_rate, tcfg.warmup_steps, tcfg.total_steps)
+    _, opt_update = adamw(lr, b1=tcfg.b1, b2=tcfg.b2,
+                          weight_decay=tcfg.weight_decay,
+                          wd_mask=_wd_mask)
+    act_sh = _act_sharding(mesh, global_batch,
+                           seq_shard=opts.seq_shard_carry)
+    moe_ctx = None
+    if opts.moe_a2a and cfg.is_moe and mesh is not None \
+            and "model" in mesh.axis_names \
+            and cfg.num_experts % mesh.shape["model"] == 0:
+        bs = batch_spec(mesh, global_batch, extra_dims=0)[0] if global_batch else None
+        batch_axes = (bs,) if isinstance(bs, str) else (tuple(bs) if bs else ())
+        moe_ctx = (mesh, batch_axes)
+
+    def loss_fn(params, batch):
+        return lm_loss(params, batch, cfg, impl=opts.impl, remat=opts.remat,
+                       act_sharding=act_sh, loss_chunk=opts.loss_chunk,
+                       moe_sharded_ctx=moe_ctx)
+
+    def compute_grads(params, batch):
+        if opts.microbatch and batch["tokens"].shape[0] % opts.microbatch == 0:
+            nmb = opts.microbatch
+            mb = jax.tree_util.tree_map(
+                lambda x: x.reshape(nmb, x.shape[0] // nmb, *x.shape[1:]), batch)
+
+            def acc_fn(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mbatch)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(a.dtype), g_acc, g)
+                return (g_acc, l_acc + l), metrics
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss_sum), metrics = jax.lax.scan(
+                acc_fn, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree_util.tree_map(lambda g: g / nmb, grads)
+            metrics = jax.tree_util.tree_map(lambda m: m[-1], metrics)
+            return loss_sum / nmb, metrics, grads
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        return loss, metrics, grads
+
+    def train_step(params, opt_state, batch, ef_state=None):
+        loss, metrics, grads = compute_grads(params, batch)
+        if opts.grad_compression and ef_state is not None:
+            grads, ef_state = compress_grads(grads, ef_state)
+        grads, gnorm = clip_by_global_norm(grads, tcfg.grad_clip)
+        updates, opt_state = opt_update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics)
+        metrics["grad_norm"] = gnorm
+        if opts.grad_compression and ef_state is not None:
+            return params, opt_state, metrics, ef_state
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def _wd_mask(params):
+    """Weight decay on matrices only (no norms/biases/embeddings)."""
+    def leaf_mask(path, leaf):
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        if "norm" in pstr or pstr.endswith("/b") or "embed" in pstr:
+            return False
+        return leaf.ndim >= 2
+    return jax.tree_util.tree_map_with_path(leaf_mask, params)
+
+
+# ---------------------------------------------------------------------------
+# Prefill / serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, opts: StepOptions = StepOptions(),
+                      max_seq: Optional[int] = None, state_dtype=jnp.bfloat16,
+                      mesh=None, global_batch: int = 0):
+    act_sh = _act_sharding(mesh, global_batch, seq_shard=opts.seq_shard_carry)
+
+    def prefill_step(params, batch):
+        logits, state, memory = lm_prefill(
+            params, batch["tokens"], cfg,
+            max_seq=max_seq or batch["tokens"].shape[1],
+            patch_embeds=batch.get("patch_embeds"),
+            enc_frames=batch.get("enc_frames"),
+            impl=opts.impl, state_dtype=state_dtype, act_sharding=act_sh)
+        out = {"logits": logits[:, -1], "state": state}
+        if memory is not None:
+            out["memory"] = memory
+        return out
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, *, opts: StepOptions = StepOptions(),
+                    mesh=None, global_batch: int = 0):
+    act_sh = _act_sharding(mesh, global_batch, seq_shard=False)
+    sharded_dec = None
+    if opts.sharded_decode and mesh is not None and "model" in mesh.axis_names:
+        # split-K decode only pays off when the cache cannot head-shard
+        tp = mesh.shape["model"]
+        if cfg.num_kv_heads % tp != 0:
+            bs = batch_spec(mesh, global_batch, extra_dims=0)[0] if global_batch else None
+            batch_axes = (bs,) if isinstance(bs, str) else (tuple(bs) if bs else ())
+            sharded_dec = (batch_axes, "model", mesh)
+
+    def serve_step(params, token, state, memory=None):
+        logits, new_state = lm_decode_step(
+            params, token, state, cfg, memory=memory, impl=opts.impl,
+            fused_position=opts.fused_position, act_sharding=act_sh,
+            sharded_decode=sharded_dec)
+        return logits, new_state
+    return serve_step
+
+
+def _act_sharding(mesh, global_batch: int, *, seq_shard: bool):
+    """(B, S, d) activation constraint: batch over dp (+ seq over model)."""
+    if mesh is None or not global_batch:
+        return None
+    bs = batch_spec(mesh, global_batch, extra_dims=2)
+    if seq_shard:
+        return NamedSharding(mesh, P(bs[0], "model", None))
+    return NamedSharding(mesh, bs)

@@ -1,0 +1,99 @@
+"""Training launcher: real training on the host devices, fault-tolerant.
+
+``python -m repro.launch.train --arch yi-6b --reduced --steps 200`` trains a
+reduced config on CPU; on a TPU pod the same entry point takes the full
+config and the production mesh.  Features exercised here (and tested):
+checkpoint/restart (auto-resume from the latest complete step), async
+checkpointing, elastic re-mesh on restore, gradient accumulation and int8
+DP gradient compression.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import TrainConfig, get_config
+from repro.data import DataConfig, TokenDataset
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import StepOptions, make_train_step
+from repro.models import init_lm
+from repro.optim import adamw
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--microbatch", type=int, default=0)
+    ap.add_argument("--grad-compression", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=20)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    tcfg = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                       warmup_steps=max(args.steps // 20, 5),
+                       microbatch=args.microbatch, seed=args.seed)
+    opts = StepOptions(microbatch=args.microbatch,
+                       grad_compression=args.grad_compression,
+                       remat=False, impl="auto")
+
+    mesh = make_host_mesh((jax.device_count(),), ("data",))
+    key = jax.random.PRNGKey(args.seed)
+    params = init_lm(key, cfg, dtype=jnp.float32)
+    opt_init, _ = adamw(tcfg.learning_rate)
+    opt_state = opt_init(params)
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = AsyncCheckpointer(args.ckpt_dir, every=args.ckpt_every)
+        if latest_step(args.ckpt_dir) is not None:
+            (params, opt_state), start_step = restore(
+                args.ckpt_dir, (params, opt_state))
+            print(f"[train] resumed from step {start_step}")
+
+    data = TokenDataset(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed))
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg, opts=opts, mesh=mesh,
+                                      global_batch=args.global_batch),
+                      donate_argnums=(0, 1))
+
+    losses = []
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if ckpt:
+            ckpt.maybe_save(step + 1, (params, opt_state))
+        if args.log_every and (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / (step + 1 - start_step)
+            print(f"[train] step {step + 1:5d} loss={losses[-1]:.4f} "
+                  f"ppl={float(metrics['perplexity']):.1f} {dt * 1e3:.0f} ms/step")
+    if ckpt:
+        ckpt.wait()
+    result = {"first_loss": losses[0] if losses else float("nan"),
+              "last_loss": losses[-1] if losses else float("nan"),
+              "steps": len(losses)}
+    print(f"[train] done: loss {result['first_loss']:.4f} -> {result['last_loss']:.4f}")
+    return result
+
+
+if __name__ == "__main__":
+    main()

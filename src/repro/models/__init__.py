@@ -1,0 +1,19 @@
+from repro.models.gdm import (  # noqa: F401
+    gdm_denoise,
+    gdm_loss,
+    init_gdm,
+    quality_per_block,
+    run_block,
+    sample_chain,
+    ssim_proxy,
+)
+from repro.models.lm import (  # noqa: F401
+    LayerSpec,
+    init_decode_state,
+    init_lm,
+    layer_pattern,
+    lm_decode_step,
+    lm_forward,
+    lm_loss,
+    lm_prefill,
+)

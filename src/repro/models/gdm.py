@@ -1,0 +1,212 @@
+"""The paper's GDM service: a DiT-style latent denoiser with B blocks.
+
+TPU adaptation of the Stable-Diffusion-class model in the paper's Fig. 1:
+instead of a CUDA UNet we use a DiT (transformer over latent patches with
+timestep + prompt conditioning) — the MXU-native formulation of the same
+denoising chain.  A paper "block" (Table II: B = 4) is ``steps_per_block``
+consecutive denoising steps; the inter-block tensor (the *latent* x_t that
+the placement engine ships between BSs, eq. C9) is the (B, H*W, C) latent.
+
+Quality Omega(k): SSIM proxy between the block-k output and the reference
+full-chain output, matching the paper's Fig. 1 measurement protocol
+(SSIM vs. denoising step, averaged over prompts).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import (
+    attention_apply,
+    attention_init,
+    dense_apply,
+    dense_init,
+    embedding_init,
+    layernorm_apply,
+    layernorm_init,
+    gelu_mlp_apply,
+    gelu_mlp_init,
+)
+
+LATENT_CHANNELS = 4
+
+
+# ---------------------------------------------------------------------------
+# DiT denoiser
+# ---------------------------------------------------------------------------
+
+def init_gdm(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    layers = []
+    lk = jax.random.split(ks[0], cfg.num_layers)
+    for i in range(cfg.num_layers):
+        k1, k2, k3 = jax.random.split(lk[i], 3)
+        layers.append({
+            "norm1": layernorm_init(d, dtype),
+            "attn": attention_init(k1, cfg, dtype=dtype),
+            "norm2": layernorm_init(d, dtype),
+            "mlp": gelu_mlp_init(k2, d, cfg.d_ff, num_layers=cfg.num_layers, dtype=dtype),
+            "ada": dense_init(k3, d, 6 * d, dtype=dtype),   # adaLN-zero modulation
+        })
+    params = {
+        "patch_in": dense_init(ks[1], LATENT_CHANNELS, d, dtype=dtype),
+        "pos": jax.random.normal(ks[2], (1, cfg.latent_hw ** 2, d)).astype(dtype) * 0.02,
+        "t_embed": dense_init(ks[3], 256, d, dtype=dtype),
+        "t_embed2": dense_init(ks[4], d, d, dtype=dtype),
+        "prompt_embed": embedding_init(ks[5], cfg.vocab_size, d, dtype=dtype),
+        "final_norm": layernorm_init(d, dtype),
+        "patch_out": dense_init(ks[6], d, LATENT_CHANNELS, dtype=dtype),
+        "layers": layers,
+    }
+    return params
+
+
+def _timestep_embedding(t, dim: int = 256):
+    """Sinusoidal timestep embedding.  t: (B,) float."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    args = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
+
+
+def gdm_denoise(params, latent, t, prompt, cfg: ModelConfig, *,
+                impl: str = "auto"):
+    """Predict noise eps for latent x_t.
+
+    latent: (B, H*W, C); t: (B,) int32; prompt: (B, P) int32 token ids.
+    Returns eps with the latent's shape.
+    """
+    x = dense_apply(params["patch_in"], latent) + params["pos"].astype(latent.dtype)
+    temb = dense_apply(params["t_embed"], _timestep_embedding(t).astype(x.dtype))
+    temb = dense_apply(params["t_embed2"], jax.nn.silu(temb))
+    pemb = jnp.take(params["prompt_embed"]["table"], prompt, axis=0).mean(axis=1)
+    cond = (temb + pemb.astype(temb.dtype))[:, None]        # (B, 1, d)
+
+    for layer in params["layers"]:
+        mods = dense_apply(layer["ada"], jax.nn.silu(cond))
+        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mods, 6, axis=-1)
+        h = layernorm_apply(layer["norm1"], x) * (1 + sc1) + sh1
+        h = attention_apply(layer["attn"], h, cfg=cfg, causal=False, rope=False,
+                            impl=impl)
+        x = x + g1 * h
+        h = layernorm_apply(layer["norm2"], x) * (1 + sc2) + sh2
+        h = gelu_mlp_apply(layer["mlp"], h)
+        x = x + g2 * h
+
+    x = layernorm_apply(params["final_norm"], x)
+    return dense_apply(params["patch_out"], x)
+
+
+# ---------------------------------------------------------------------------
+# Diffusion schedule + sampling in blocks
+# ---------------------------------------------------------------------------
+
+def make_schedule(num_steps: int, beta_min: float = 1e-4, beta_max: float = 0.02):
+    betas = jnp.linspace(beta_min, beta_max, num_steps, dtype=jnp.float32)
+    alphas = 1.0 - betas
+    alpha_bar = jnp.cumprod(alphas)
+    return {"betas": betas, "alphas": alphas, "alpha_bar": alpha_bar}
+
+
+def ddim_step(params, latent, step_idx, prompt, cfg: ModelConfig, schedule, *,
+              total_steps: int, impl: str = "auto"):
+    """One deterministic DDIM step from t=step_idx to step_idx-1."""
+    t = jnp.full((latent.shape[0],), step_idx, jnp.int32)
+    eps = gdm_denoise(params, latent, t, prompt, cfg, impl=impl)
+    ab_t = schedule["alpha_bar"][step_idx]
+    ab_prev = jnp.where(step_idx > 0, schedule["alpha_bar"][jnp.maximum(step_idx - 1, 0)], 1.0)
+    x0 = (latent - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1 - ab_prev) * eps, x0
+
+
+def run_block(params, latent, prompt, cfg: ModelConfig, schedule, *,
+              block_idx: int, steps_per_block: int, total_steps: int,
+              impl: str = "auto"):
+    """Execute denoising block k (the paper's per-frame execution unit).
+
+    Blocks count down the chain: block 0 covers steps [T-1 .. T-spb], etc.
+    Returns (latent after the block, current x0 estimate).
+    """
+    start = total_steps - 1 - block_idx * steps_per_block
+
+    def body(i, carry):
+        lat, _ = carry
+        lat, x0 = ddim_step(params, lat, start - i, prompt, cfg, schedule,
+                            total_steps=total_steps, impl=impl)
+        return lat, x0
+
+    return jax.lax.fori_loop(0, steps_per_block, body,
+                             (latent, jnp.zeros_like(latent)))
+
+
+def sample_chain(params, key, prompt, cfg: ModelConfig, *, num_blocks: int,
+                 steps_per_block: int = 4, impl: str = "auto"):
+    """Full chain: B blocks from pure noise; returns list of per-block x0."""
+    total = num_blocks * steps_per_block
+    schedule = make_schedule(total)
+    hw2 = cfg.latent_hw ** 2
+    latent = jax.random.normal(key, (prompt.shape[0], hw2, LATENT_CHANNELS))
+    outs = []
+    for b in range(num_blocks):
+        latent, x0 = run_block(params, latent, prompt, cfg, schedule,
+                               block_idx=b, steps_per_block=steps_per_block,
+                               total_steps=total, impl=impl)
+        outs.append(x0)
+    return outs
+
+
+# ---------------------------------------------------------------------------
+# Quality Omega(k): SSIM proxy (paper Fig. 1 protocol)
+# ---------------------------------------------------------------------------
+
+def ssim_proxy(a, b, *, c1: float = 0.01 ** 2, c2: float = 0.03 ** 2):
+    """Global-statistics SSIM between two latents (per-sample mean)."""
+    axes = tuple(range(1, a.ndim))
+    mu_a = jnp.mean(a, axis=axes)
+    mu_b = jnp.mean(b, axis=axes)
+    var_a = jnp.var(a, axis=axes)
+    var_b = jnp.var(b, axis=axes)
+    cov = jnp.mean((a - mu_a.reshape(-1, *([1] * (a.ndim - 1))))
+                   * (b - mu_b.reshape(-1, *([1] * (b.ndim - 1)))), axis=axes)
+    num = (2 * mu_a * mu_b + c1) * (2 * cov + c2)
+    den = (mu_a ** 2 + mu_b ** 2 + c1) * (var_a + var_b + c2)
+    return num / den
+
+
+def quality_per_block(params, key, prompt, cfg: ModelConfig, *,
+                      num_blocks: int, steps_per_block: int = 4,
+                      impl: str = "auto") -> jnp.ndarray:
+    """Omega(k) for k = 1..B: SSIM of block-k x0 estimate vs final output.
+
+    Monotone-increasing in expectation (Fig. 1); the sim layer consumes these
+    curves as the service quality functions Omega_s(.).
+    """
+    outs = sample_chain(params, key, prompt, cfg, num_blocks=num_blocks,
+                        steps_per_block=steps_per_block, impl=impl)
+    final = outs[-1]
+    qs = [jnp.mean(jnp.clip(ssim_proxy(o, final), 0.0, 1.0)) for o in outs]
+    return jnp.stack(qs)
+
+
+# ---------------------------------------------------------------------------
+# Training loss (noise prediction)
+# ---------------------------------------------------------------------------
+
+def gdm_loss(params, batch: Dict, key, cfg: ModelConfig, *,
+             total_steps: int = 16, impl: str = "auto"):
+    """Standard eps-prediction MSE.  batch: {prompt (B,P), latent (B,H,W,C)}."""
+    lat = batch["latent"].reshape(batch["latent"].shape[0], -1, LATENT_CHANNELS)
+    schedule = make_schedule(total_steps)
+    k1, k2 = jax.random.split(key)
+    t = jax.random.randint(k1, (lat.shape[0],), 0, total_steps)
+    eps = jax.random.normal(k2, lat.shape, lat.dtype)
+    ab = schedule["alpha_bar"][t][:, None, None]
+    noisy = jnp.sqrt(ab) * lat + jnp.sqrt(1 - ab) * eps
+    pred = gdm_denoise(params, noisy, t, batch["prompt"], cfg, impl=impl)
+    loss = jnp.mean((pred - eps) ** 2)
+    return loss, {"loss": loss}

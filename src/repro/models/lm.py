@@ -1,0 +1,485 @@
+"""Unified LM builder: every assigned architecture from one ModelConfig.
+
+Layer heterogeneity (jamba's 1:7 attn:mamba interleave, xlstm's 7:1
+mLSTM:sLSTM mix, per-layer MoE cadence) is expressed as a *periodic layer
+pattern*; the model scans over periods with period-stacked parameters
+(``jax.lax.scan``), which keeps the lowered HLO size independent of depth —
+essential for compiling 94-layer configs in the dry-run.  Parameter init is
+pure-jnp and ``jax.eval_shape``-able, so huge configs are never materialized
+(the dry-run lowers against ShapeDtypeStructs only).
+
+Decode carries a per-period state pytree (KV caches / SSM states / conv
+tails); these states are exactly the "latents" the paper's placement engine
+ships between nodes when a chain hops BSs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import (
+    KVCache,
+    attention_apply,
+    attention_decode,
+    attention_init,
+    init_kv_cache,
+    mamba_apply,
+    mamba_decode,
+    mamba_init,
+    mamba_init_state,
+    mlstm_apply,
+    mlstm_decode,
+    mlstm_init,
+    mlstm_init_state,
+    moe_apply,
+    moe_init,
+    slstm_apply,
+    slstm_decode,
+    slstm_init,
+    slstm_init_state,
+    swiglu_apply,
+    swiglu_init,
+    gelu_mlp_apply,
+    gelu_mlp_init,
+)
+from repro.nn.attention import prefill_kv_cache, cross_attention_decode
+from repro.nn.linear import dense_apply, dense_init, embedding_init
+from repro.nn.norm import layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init
+from repro.nn.xlstm import MLSTMState
+
+
+# ---------------------------------------------------------------------------
+# Layer pattern
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    mixer: str          # attn | mamba | mlstm | slstm
+    mlp: str            # swiglu | moe | gelu | none
+    cross: bool = False # decoder cross-attention (enc-dec archs)
+
+
+def layer_pattern(cfg: ModelConfig, *, decoder: bool = True) -> List[LayerSpec]:
+    """The repeating per-period layer pattern for ``cfg``."""
+    if not decoder:                      # encoder stack (enc-dec archs)
+        return [LayerSpec("attn", "gelu")]
+    if cfg.family == "ssm" and cfg.xlstm is not None:
+        period = cfg.xlstm.slstm_every
+        return [LayerSpec("slstm" if j == 0 else "mlstm", "none")
+                for j in range(period)]
+    if cfg.family == "hybrid":
+        period = cfg.attn_every
+        specs = []
+        for j in range(period):
+            mixer = "attn" if j == 0 else "mamba"
+            mlp = "moe" if (cfg.is_moe and j % cfg.moe_every == (cfg.moe_every - 1)) else "swiglu"
+            specs.append(LayerSpec(mixer, mlp))
+        return specs
+    mlp = "moe" if cfg.is_moe else ("gelu" if cfg.is_encdec else "swiglu")
+    return [LayerSpec("attn", mlp, cross=cfg.is_encdec)]
+
+
+def _norm_kind(cfg: ModelConfig) -> str:
+    return "ln" if cfg.is_encdec else "rms"
+
+
+def _norm_init(cfg, dtype):
+    return layernorm_init(cfg.d_model, dtype) if _norm_kind(cfg) == "ln" \
+        else rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm_apply(cfg, p, x):
+    return layernorm_apply(p, x) if _norm_kind(cfg) == "ln" \
+        else rmsnorm_apply(p, x, eps=cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_sublayer(key, spec: LayerSpec, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 5)
+    p: Dict[str, Any] = {"norm1": _norm_init(cfg, dtype)}
+    if spec.mixer == "attn":
+        p["attn"] = attention_init(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == "mamba":
+        p["mamba"] = mamba_init(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == "mlstm":
+        p["mlstm"] = mlstm_init(ks[0], cfg, dtype=dtype)
+    elif spec.mixer == "slstm":
+        p["slstm"] = slstm_init(ks[0], cfg, dtype=dtype)
+    if spec.cross:
+        p["cross_norm"] = _norm_init(cfg, dtype)
+        p["cross"] = attention_init(ks[1], cfg, dtype=dtype, cross=True)
+    if spec.mlp != "none":
+        p["norm2"] = _norm_init(cfg, dtype)
+        if spec.mlp == "swiglu":
+            p["mlp"] = swiglu_init(ks[2], cfg.d_model, cfg.d_ff,
+                                   num_layers=cfg.num_layers, dtype=dtype)
+        elif spec.mlp == "gelu":
+            p["mlp"] = gelu_mlp_init(ks[2], cfg.d_model, cfg.d_ff,
+                                     num_layers=cfg.num_layers, dtype=dtype)
+        elif spec.mlp == "moe":
+            p["moe"] = moe_init(ks[2], cfg, dtype=dtype)
+    return p
+
+
+def _init_period(key, pattern: List[LayerSpec], cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, len(pattern))
+    return tuple(_init_sublayer(ks[j], spec, cfg, dtype)
+                 for j, spec in enumerate(pattern))
+
+
+def init_lm(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    """Full parameter pytree.  eval_shape-safe (pure jnp)."""
+    pattern = layer_pattern(cfg)
+    period = len(pattern)
+    assert cfg.num_layers % period == 0, (cfg.num_layers, period)
+    n_periods = cfg.num_layers // period
+
+    k_embed, k_layers, k_head, k_enc, k_front = jax.random.split(key, 5)
+    params: Dict[str, Any] = {
+        "embed": embedding_init(k_embed, cfg.padded_vocab(), cfg.d_model, dtype=dtype),
+        "final_norm": _norm_init(cfg, dtype),
+    }
+    layer_keys = jax.random.split(k_layers, n_periods)
+    params["layers"] = jax.vmap(
+        lambda k: _init_period(k, pattern, cfg, dtype))(layer_keys)
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab(),
+                                    stddev=cfg.d_model ** -0.5, dtype=dtype)
+    if cfg.is_encdec:
+        enc_pattern = layer_pattern(cfg, decoder=False)
+        enc_keys = jax.random.split(k_enc, cfg.encoder_layers)
+        params["encoder"] = {
+            "layers": jax.vmap(
+                lambda k: _init_period(k, enc_pattern, cfg, dtype))(enc_keys),
+            "final_norm": _norm_init(cfg, dtype),
+        }
+    if cfg.frontend == "image_patches":
+        # projection from stub patch embeddings into d_model
+        params["patch_proj"] = dense_init(k_front, cfg.d_model, cfg.d_model, dtype=dtype)
+    if cfg.frontend == "audio_frames":
+        params["frame_proj"] = dense_init(k_front, cfg.d_model, cfg.d_model, dtype=dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_sublayer(p, spec: LayerSpec, x, cfg: ModelConfig, *,
+                    memory=None, impl: str, window: int = 0,
+                    moe_sharded_ctx=None):
+    """One sub-layer (mixer + mlp), full-sequence.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = _norm_apply(cfg, p["norm1"], x)
+    if spec.mixer == "attn":
+        h = attention_apply(p["attn"], h, cfg=cfg, window=window, impl=impl)
+    elif spec.mixer == "mamba":
+        h = mamba_apply(p["mamba"], h, cfg=cfg, impl=impl)
+    elif spec.mixer == "mlstm":
+        h = mlstm_apply(p["mlstm"], h, cfg=cfg)
+    elif spec.mixer == "slstm":
+        h = slstm_apply(p["slstm"], h, cfg=cfg)
+    x = x + h
+    if spec.cross and memory is not None:
+        h = _norm_apply(cfg, p["cross_norm"], x)
+        h = attention_apply(p["cross"], h, cfg=cfg, memory=memory, impl=impl)
+        x = x + h
+    if spec.mlp != "none":
+        h = _norm_apply(cfg, p["norm2"], x)
+        if spec.mlp == "moe":
+            if moe_sharded_ctx is not None:
+                from repro.nn.moe_sharded import moe_apply_sharded
+                mesh, batch_axes = moe_sharded_ctx
+                h, aux = moe_apply_sharded(p["moe"], h, cfg=cfg, mesh=mesh,
+                                           batch_axes=batch_axes)
+            else:
+                h, aux = moe_apply(p["moe"], h, cfg=cfg)
+        elif spec.mlp == "gelu":
+            h = gelu_mlp_apply(p["mlp"], h)
+        else:
+            h = swiglu_apply(p["mlp"], h)
+        x = x + h
+    return x, aux
+
+
+def _encoder_forward(params, frames, cfg: ModelConfig, *, impl: str):
+    """Bidirectional encoder over stub frame embeddings (B, L_enc, d)."""
+    x = dense_apply(params["frame_proj"], frames) if "frame_proj" in params else frames
+    enc_pattern = layer_pattern(cfg, decoder=False)
+
+    def period_fn(x, p_period):
+        for j, spec in enumerate(enc_pattern):
+            h = _norm_apply(cfg, p_period[j]["norm1"], x)
+            h = attention_apply(p_period[j]["attn"], h, cfg=cfg, causal=False, impl=impl)
+            x = x + h
+            h = _norm_apply(cfg, p_period[j]["norm2"], x)
+            h = gelu_mlp_apply(p_period[j]["mlp"], h)
+            x = x + h
+        return x, None
+
+    x, _ = jax.lax.scan(period_fn, x, params["encoder"]["layers"])
+    return _norm_apply(cfg, params["encoder"]["final_norm"], x)
+
+
+def lm_forward(params, tokens, cfg: ModelConfig, *, patch_embeds=None,
+               enc_frames=None, impl: str = "auto", remat: bool = False,
+               window: int = 0, act_sharding=None, moe_sharded_ctx=None):
+    """Full-sequence forward -> logits (B, S, padded_vocab).
+
+    tokens: (B, S) int32.  ``patch_embeds`` (B, P, d) fills the first P
+    positions for VLM archs; ``enc_frames`` (B, L_enc, d) is the audio-stub
+    encoder input for enc-dec archs.  ``act_sharding`` (a NamedSharding for
+    the (B, S, d) activations): applied post-embedding and at every layer
+    boundary — without it GSPMD is free to replicate the batch dim of
+    intermediates, which it demonstrably does (see DESIGN.md §6).  Passing a
+    sequence-over-model spec turns this into the sequence-parallel (SP)
+    variant: the saved scan carries shard over the model axis too.
+    """
+    pattern = layer_pattern(cfg)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if patch_embeds is not None:
+        proj = dense_apply(params["patch_proj"], patch_embeds.astype(x.dtype))
+        p = patch_embeds.shape[1]
+        x = jnp.concatenate([proj, x[:, p:]], axis=1)
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+    memory = None
+    if cfg.is_encdec:
+        assert enc_frames is not None, "enc-dec arch needs enc_frames"
+        memory = _encoder_forward(params, enc_frames.astype(x.dtype), cfg, impl=impl)
+        if act_sharding is not None:
+            memory = jax.lax.with_sharding_constraint(memory, act_sharding)
+
+    def period_fn(carry, p_period):
+        x, aux = carry
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        for j, spec in enumerate(pattern):
+            x, a = _apply_sublayer(p_period[j], spec, x, cfg, memory=memory,
+                                   impl=impl, window=window,
+                                   moe_sharded_ctx=moe_sharded_ctx)
+            aux = aux + a
+        return (x, aux), None
+
+    if remat:
+        period_fn = jax.checkpoint(period_fn)
+    (x, aux), _ = jax.lax.scan(period_fn, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _lm_head(params, x, cfg)
+    return logits, aux
+
+
+def _lm_head(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].astype(x.dtype).T
+    else:
+        logits = dense_apply(params["head"], x)
+    vpad = cfg.padded_vocab()
+    if vpad != cfg.vocab_size:
+        neg = jnp.full((vpad - cfg.vocab_size,), -1e9, logits.dtype)
+        logits = logits.at[..., cfg.vocab_size:].set(neg)
+    return logits
+
+
+def lm_loss(params, batch, cfg: ModelConfig, *, impl: str = "auto",
+            remat: bool = False, aux_weight: float = 0.01,
+            act_sharding=None, loss_chunk: int = 0, moe_sharded_ctx=None):
+    """Causal LM cross-entropy + MoE aux loss.  batch: tokens/labels (+stubs).
+
+    ``loss_chunk`` > 0 computes the cross-entropy in sequence chunks
+    (scanned), never materializing the full (B, S, V) float32 log-softmax —
+    the memory-roofline lever for large-vocab archs.
+    """
+    logits, aux = lm_forward(
+        params, batch["tokens"], cfg,
+        patch_embeds=batch.get("patch_embeds"),
+        enc_frames=batch.get("enc_frames"),
+        impl=impl, remat=remat, act_sharding=act_sharding,
+        moe_sharded_ctx=moe_sharded_ctx)
+    labels = batch["labels"]
+    if loss_chunk and logits.shape[1] % loss_chunk == 0:
+        n_chunks = logits.shape[1] // loss_chunk
+        lg = logits.reshape(logits.shape[0], n_chunks, loss_chunk, -1)
+        lb = labels.reshape(labels.shape[0], n_chunks, loss_chunk)
+
+        def chunk_fn(acc, xs):
+            lg_c, lb_c = xs                                  # (B, C, V), (B, C)
+            logp = jax.nn.log_softmax(lg_c.astype(jnp.float32), axis=-1)
+            ll = jnp.take_along_axis(logp, lb_c[..., None], axis=-1)[..., 0]
+            return acc + jnp.sum(ll), None
+
+        total_ll, _ = jax.lax.scan(
+            chunk_fn, jnp.zeros((), jnp.float32),
+            (jnp.moveaxis(lg, 1, 0), jnp.moveaxis(lb, 1, 0)))
+        loss = -total_ll / (labels.shape[0] * labels.shape[1])
+    else:
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+        loss = -jnp.mean(ll)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux,
+                   "perplexity": jnp.exp(jnp.clip(loss, a_max=20.0))}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve): per-period state pytree
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_seq: int, *,
+                      dtype=jnp.bfloat16):
+    """Stacked (num_periods, ...) decode state for every stateful sub-layer."""
+    pattern = layer_pattern(cfg)
+    n_periods = cfg.num_layers // len(pattern)
+
+    def one_period(_):
+        states = []
+        for spec in pattern:
+            if spec.mixer == "attn":
+                states.append({"kv": init_kv_cache(cfg, batch, max_seq, dtype)})
+            elif spec.mixer == "mamba":
+                states.append({"mamba": mamba_init_state(cfg, batch, dtype=dtype)})
+            elif spec.mixer == "mlstm":
+                xc = cfg.xlstm
+                d_in = int(xc.proj_factor * cfg.d_model)
+                states.append({
+                    "mlstm": mlstm_init_state(cfg, batch),
+                    "conv_tail": jnp.zeros((batch, xc.conv_kernel - 1, d_in), dtype),
+                })
+            elif spec.mixer == "slstm":
+                states.append({"slstm": slstm_init_state(cfg, batch)})
+            else:
+                states.append({})
+        return tuple(states)
+
+    return jax.vmap(one_period)(jnp.arange(n_periods))
+
+
+def lm_prefill(params, tokens, cfg: ModelConfig, *, max_seq: int,
+               patch_embeds=None, enc_frames=None, impl: str = "auto",
+               state_dtype=jnp.bfloat16, act_sharding=None):
+    """Prompt prefill: full forward that also materializes the decode state.
+
+    Returns (logits (B, S, vocab), state, memory) — ``state`` structurally
+    identical to :func:`init_decode_state` with lengths = S, so decode can
+    continue seamlessly.  Recurrent families use closed-form/threaded state
+    extraction (no re-scan).
+    """
+    pattern = layer_pattern(cfg)
+    x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    if patch_embeds is not None:
+        proj = dense_apply(params["patch_proj"], patch_embeds.astype(x.dtype))
+        p = patch_embeds.shape[1]
+        x = jnp.concatenate([proj, x[:, p:]], axis=1)
+    memory = None
+    if cfg.is_encdec:
+        assert enc_frames is not None
+        memory = _encoder_forward(params, enc_frames.astype(x.dtype), cfg, impl=impl)
+
+    from repro.nn.xlstm import mlstm_apply_with_state
+    from repro.nn import mamba_apply as _mamba_apply, slstm_apply as _slstm_apply
+
+    def period_fn(x, p_period):
+        states = []
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        for j, spec in enumerate(pattern):
+            p = p_period[j]
+            h = _norm_apply(cfg, p["norm1"], x)
+            if spec.mixer == "attn":
+                kv = prefill_kv_cache(p["attn"], h, cfg=cfg, max_seq=max_seq,
+                                      dtype=state_dtype)
+                h = attention_apply(p["attn"], h, cfg=cfg, impl=impl)
+                states.append({"kv": kv})
+            elif spec.mixer == "mamba":
+                h, ms = _mamba_apply(p["mamba"], h, cfg=cfg, return_state=True)
+                states.append({"mamba": ms._replace(conv=ms.conv.astype(state_dtype))})
+            elif spec.mixer == "mlstm":
+                h, mls, tail = mlstm_apply_with_state(p["mlstm"], h, cfg=cfg)
+                states.append({"mlstm": mls, "conv_tail": tail.astype(state_dtype)})
+            elif spec.mixer == "slstm":
+                h, sls = _slstm_apply(p["slstm"], h, cfg=cfg, return_state=True)
+                states.append({"slstm": sls})
+            x = x + h
+            if spec.cross and memory is not None:
+                hc = _norm_apply(cfg, p["cross_norm"], x)
+                hc = attention_apply(p["cross"], hc, cfg=cfg, memory=memory, impl=impl)
+                x = x + hc
+            if spec.mlp != "none":
+                h = _norm_apply(cfg, p["norm2"], x)
+                if spec.mlp == "moe":
+                    h, _ = moe_apply(p["moe"], h, cfg=cfg)
+                elif spec.mlp == "gelu":
+                    h = gelu_mlp_apply(p["mlp"], h)
+                else:
+                    h = swiglu_apply(p["mlp"], h)
+                x = x + h
+        return x, tuple(states)
+
+    x, state = jax.lax.scan(period_fn, x, params["layers"])
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _lm_head(params, x, cfg)
+    return logits, state, memory
+
+
+def lm_decode_step(params, token, state, cfg: ModelConfig, *,
+                   memory=None, impl: str = "auto", fused_position: bool = True,
+                   act_sharding=None, sharded_decode=None):
+    """One decode step.  token: (B,) int32 -> (logits (B, vocab), new_state)."""
+    pattern = layer_pattern(cfg)
+    x = jnp.take(params["embed"]["table"], token[:, None], axis=0)  # (B,1,d)
+    if act_sharding is not None:
+        x = jax.lax.with_sharding_constraint(x, act_sharding)
+
+    def period_fn(x, scanned):
+        p_period, s_period = scanned
+        new_states = []
+        if act_sharding is not None:
+            x = jax.lax.with_sharding_constraint(x, act_sharding)
+        for j, spec in enumerate(pattern):
+            p, s = p_period[j], s_period[j]
+            h = _norm_apply(cfg, p["norm1"], x)
+            if spec.mixer == "attn":
+                h, kv = attention_decode(p["attn"], h, s["kv"], cfg=cfg,
+                                         impl=impl, fused_position=fused_position,
+                                         sharded_decode=sharded_decode)
+                new_states.append({"kv": kv})
+            elif spec.mixer == "mamba":
+                h, ms = mamba_decode(p["mamba"], h, s["mamba"], cfg=cfg)
+                new_states.append({"mamba": ms})
+            elif spec.mixer == "mlstm":
+                h, mls, tail = mlstm_decode(p["mlstm"], h, s["mlstm"], cfg=cfg,
+                                            conv_tail=s["conv_tail"].astype(h.dtype))
+                new_states.append({"mlstm": mls,
+                                   "conv_tail": tail.astype(s["conv_tail"].dtype)})
+            elif spec.mixer == "slstm":
+                h, sls = slstm_decode(p["slstm"], h, s["slstm"], cfg=cfg)
+                new_states.append({"slstm": sls})
+            x = x + h
+            if spec.cross and memory is not None:
+                hc = _norm_apply(cfg, p["cross_norm"], x)
+                hc = cross_attention_decode(p["cross"], hc, memory, cfg=cfg, impl=impl)
+                x = x + hc
+            if spec.mlp != "none":
+                h = _norm_apply(cfg, p["norm2"], x)
+                if spec.mlp == "moe":
+                    h, _ = moe_apply(p["moe"], h, cfg=cfg)
+                elif spec.mlp == "gelu":
+                    h = gelu_mlp_apply(p["mlp"], h)
+                else:
+                    h = swiglu_apply(p["mlp"], h)
+                x = x + h
+        return x, tuple(new_states)
+
+    x, new_state = jax.lax.scan(period_fn, x, (params["layers"], state))
+    x = _norm_apply(cfg, params["final_norm"], x)
+    logits = _lm_head(params, x, cfg)
+    return logits[:, 0], new_state

@@ -1,0 +1,41 @@
+from repro.nn.attention import (  # noqa: F401
+    KVCache,
+    attention_apply,
+    attention_decode,
+    attention_init,
+    cross_attention_decode,
+    init_kv_cache,
+    prefill_kv_cache,
+)
+from repro.nn.linear import (  # noqa: F401
+    dense_apply,
+    dense_init,
+    embedding_apply,
+    embedding_attend,
+    embedding_init,
+)
+from repro.nn.mlp import gelu_mlp_apply, gelu_mlp_init, swiglu_apply, swiglu_init  # noqa: F401
+from repro.nn.moe import moe_apply, moe_init  # noqa: F401
+from repro.nn.norm import layernorm_apply, layernorm_init, rmsnorm_apply, rmsnorm_init  # noqa: F401
+from repro.nn.recurrent import lstm_apply, lstm_cell, lstm_init  # noqa: F401
+from repro.nn.rope import apply_rope, rope_frequencies  # noqa: F401
+from repro.nn.ssm import (  # noqa: F401
+    MambaState,
+    mamba_apply,
+    mamba_decode,
+    mamba_init,
+    mamba_init_state,
+)
+from repro.nn.xlstm import (  # noqa: F401
+    MLSTMState,
+    SLSTMState,
+    mlstm_apply,
+    mlstm_apply_with_state,
+    mlstm_decode,
+    mlstm_init,
+    mlstm_init_state,
+    slstm_apply,
+    slstm_decode,
+    slstm_init,
+    slstm_init_state,
+)

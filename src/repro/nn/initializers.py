@@ -1,0 +1,50 @@
+"""Weight initializers (pure functions of a PRNG key)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def normal(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return (stddev * jax.random.normal(key, shape)).astype(dtype)
+
+
+def truncated_normal(key, shape, stddev: float = 0.02, dtype=jnp.float32):
+    return (stddev * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+def xavier_uniform(key, shape, dtype=jnp.float32):
+    fan_in, fan_out = _fans(shape)
+    limit = math.sqrt(6.0 / (fan_in + fan_out))
+    return jax.random.uniform(key, shape, minval=-limit, maxval=limit).astype(dtype)
+
+
+def lecun_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fans(shape)
+    return (jax.random.normal(key, shape) / math.sqrt(fan_in)).astype(dtype)
+
+
+def he_normal(key, shape, dtype=jnp.float32):
+    fan_in, _ = _fans(shape)
+    return (jax.random.normal(key, shape) * math.sqrt(2.0 / fan_in)).astype(dtype)
+
+
+def zeros(_key, shape, dtype=jnp.float32):
+    return jnp.zeros(shape, dtype)
+
+
+def ones(_key, shape, dtype=jnp.float32):
+    return jnp.ones(shape, dtype)
+
+
+def _fans(shape):
+    if len(shape) < 1:
+        return 1, 1
+    if len(shape) == 1:
+        return shape[0], shape[0]
+    receptive = 1
+    for s in shape[:-2]:
+        receptive *= s
+    return shape[-2] * receptive, shape[-1] * receptive

@@ -1,0 +1,40 @@
+"""Dense / Embedding layers as pure init/apply function pairs.
+
+Params are plain dicts of jnp arrays; compute is done in the activation dtype
+while params may be stored in a (possibly lower-precision) storage dtype.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, bias: bool = False,
+               stddev: float | None = None, dtype=jnp.float32):
+    stddev = stddev if stddev is not None else in_dim ** -0.5
+    p = {"w": init.normal(key, (in_dim, out_dim), stddev, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def dense_apply(params, x):
+    y = x @ params["w"].astype(x.dtype)
+    if "b" in params:
+        y = y + params["b"].astype(x.dtype)
+    return y
+
+
+def embedding_init(key, vocab: int, dim: int, *, dtype=jnp.float32):
+    return {"table": init.normal(key, (vocab, dim), 0.02, dtype)}
+
+
+def embedding_apply(params, ids):
+    return jnp.take(params["table"], ids, axis=0)
+
+
+def embedding_attend(params, x):
+    """Tied-softmax logits: x @ table.T"""
+    return x @ params["table"].astype(x.dtype).T

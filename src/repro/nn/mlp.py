@@ -1,0 +1,40 @@
+"""Feed-forward blocks: SwiGLU (llama-family) and GELU (enc-dec family)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.linear import dense_apply, dense_init
+
+
+def swiglu_init(key, d_model: int, d_ff: int, *, num_layers: int = 1,
+                dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": dense_init(k1, d_model, d_ff, dtype=dtype),
+        "up": dense_init(k2, d_model, d_ff, dtype=dtype),
+        "down": dense_init(k3, d_ff, d_model,
+                           stddev=d_ff ** -0.5 / max(1, 2 * num_layers) ** 0.5,
+                           dtype=dtype),
+    }
+
+
+def swiglu_apply(params, x):
+    g = dense_apply(params["gate"], x)
+    u = dense_apply(params["up"], x)
+    return dense_apply(params["down"], jax.nn.silu(g) * u)
+
+
+def gelu_mlp_init(key, d_model: int, d_ff: int, *, num_layers: int = 1,
+                  dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "up": dense_init(k1, d_model, d_ff, bias=True, dtype=dtype),
+        "down": dense_init(k2, d_ff, d_model, bias=True,
+                           stddev=d_ff ** -0.5 / max(1, 2 * num_layers) ** 0.5,
+                           dtype=dtype),
+    }
+
+
+def gelu_mlp_apply(params, x):
+    return dense_apply(params["down"], jax.nn.gelu(dense_apply(params["up"], x)))

@@ -1,0 +1,86 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded sorted dispatch.
+
+TPU-idiomatic expert parallelism: expert weights are stacked (E, ...) arrays
+(sharded over the ``model`` axis in the production mesh), tokens are routed
+via ``top_k`` -> argsort-by-expert -> scatter into an (E, C, d) dispatch
+buffer -> grouped einsum -> gather back.  When tokens are data-sharded and
+experts model-sharded, XLA lowers the scatter/gather into the all-to-all pair
+that the roofline's collective term accounts for.
+
+Capacity drops follow GShard semantics (overflow tokens fall through the
+residual); the load-balancing auxiliary loss is returned for the train step.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.nn import initializers as init
+
+
+def moe_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    dff = cfg.moe_d_ff or cfg.d_ff
+    e = cfg.num_experts
+    ks = jax.random.split(key, 4)
+    return {
+        "router": init.normal(ks[0], (d, e), d ** -0.5, jnp.float32),
+        "gate_w": init.normal(ks[1], (e, d, dff), d ** -0.5, dtype),
+        "up_w": init.normal(ks[2], (e, d, dff), d ** -0.5, dtype),
+        "down_w": init.normal(ks[3], (e, dff, d),
+                              dff ** -0.5 / max(1, 2 * cfg.num_layers) ** 0.5,
+                              dtype),
+    }
+
+
+def moe_apply(params, x, *, cfg: ModelConfig,
+              capacity_factor: float | None = None) -> Tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux_loss)."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe_capacity_factor
+    b, s, d = x.shape
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ params["router"])               # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, k)                               # (T, k)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style): E * sum_e f_e * P_e
+    me = jnp.mean(probs, axis=0)                                       # (E,)
+    ce = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (t * k)
+    aux = e * jnp.sum(me * ce)
+
+    capacity = int(max(k, capacity_factor * t * k / e))
+
+    flat_ids = ids.reshape(-1)                                         # (T*k,)
+    flat_gates = gates.reshape(-1)
+    order = jnp.argsort(flat_ids)
+    sorted_ids = flat_ids[order]
+    sorted_gates = flat_gates[order]
+    token_idx = order // k
+
+    starts = jnp.searchsorted(sorted_ids, jnp.arange(e))               # (E,)
+    pos = jnp.arange(t * k) - starts[sorted_ids]                       # rank in group
+    keep = (pos < capacity).astype(xf.dtype)
+    pos_c = jnp.minimum(pos, capacity - 1)
+
+    # dispatch: (E, C, d) — dropped tokens contribute zero via `keep`
+    buf = jnp.zeros((e, capacity, d), xf.dtype)
+    buf = buf.at[sorted_ids, pos_c].add(xf[token_idx] * keep[:, None])
+
+    g = jnp.einsum("ecd,edf->ecf", buf, params["gate_w"].astype(xf.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, params["up_w"].astype(xf.dtype))
+    h = jax.nn.silu(g) * u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, params["down_w"].astype(xf.dtype))
+
+    # combine: gather back and weight by gate
+    y_tok = out_buf[sorted_ids, pos_c] * (keep * sorted_gates.astype(xf.dtype))[:, None]
+    y = jnp.zeros((t, d), xf.dtype).at[token_idx].add(y_tok)
+    return y.reshape(b, s, d), aux

@@ -1,0 +1,43 @@
+"""LSTM cell + sequence runner (used by the D3QL approximator, Table II)."""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import initializers as init
+
+
+def lstm_init(key, in_dim: int, hidden: int, *, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {
+        "wx": init.xavier_uniform(k1, (in_dim, 4 * hidden), dtype),
+        "wh": init.xavier_uniform(k2, (hidden, 4 * hidden), dtype),
+        "b": jnp.zeros((4 * hidden,), dtype),
+    }
+
+
+def lstm_cell(params, x, state: Tuple[jax.Array, jax.Array]):
+    """x: (B, in); state: (h, c) each (B, hidden)."""
+    h, c = state
+    z = x @ params["wx"] + h @ params["wh"] + params["b"]
+    i, f, g, o = jnp.split(z, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return h, (h, c)
+
+
+def lstm_apply(params, xs, state=None):
+    """xs: (B, T, in) -> (hs (B, T, hidden), final_state)."""
+    b = xs.shape[0]
+    hidden = params["wh"].shape[0]
+    if state is None:
+        state = (jnp.zeros((b, hidden), xs.dtype), jnp.zeros((b, hidden), xs.dtype))
+
+    def step(carry, x_t):
+        h, carry = lstm_cell(params, x_t, carry)
+        return carry, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(xs, 1, 0))
+    return jnp.moveaxis(hs, 0, 1), state

@@ -1,0 +1,127 @@
+"""Mamba selective-SSM block (jamba's non-attention layers).
+
+Full-sequence path uses the chunked Pallas scan (``kernels.ops.ssm_scan``);
+the decode path carries an O(1) recurrent state (conv tail + SSM state) —
+this state is the "latent" that the placement engine ships between nodes for
+hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MambaConfig, ModelConfig
+from repro.kernels import ops, ref
+from repro.nn import initializers as init
+from repro.nn.linear import dense_apply, dense_init
+
+
+class MambaState(NamedTuple):
+    conv: jax.Array   # (B, d_conv - 1, d_in) — causal conv tail
+    ssm: jax.Array    # (B, d_in, N) float32 — recurrent state
+
+
+def mamba_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    mc = cfg.mamba or MambaConfig()
+    d = cfg.d_model
+    d_in = mc.expand * d
+    dt_rank = mc.resolved_dt_rank(d)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A; dt bias init for softplus range
+    a_init = jnp.tile(jnp.arange(1, mc.d_state + 1, dtype=jnp.float32)[None, :],
+                      (d_in, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": init.lecun_normal(ks[1], (mc.d_conv, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": dense_init(ks[2], d_in, dt_rank + 2 * mc.d_state, dtype=dtype),
+        "dt_proj": {
+            "w": init.normal(ks[3], (dt_rank, d_in), dt_rank ** -0.5, dtype),
+            "b": jnp.log(jnp.expm1(jnp.exp(jax.random.uniform(
+                ks[4], (d_in,), minval=jnp.log(1e-3), maxval=jnp.log(1e-1))))).astype(dtype),
+        },
+        "a_log": jnp.log(a_init),
+        "d": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[5], d_in, d,
+                               stddev=d_in ** -0.5 / max(1, 2 * cfg.num_layers) ** 0.5,
+                               dtype=dtype),
+    }
+
+
+def _causal_conv(x, w, b, tail: Optional[jax.Array] = None):
+    """Depthwise causal conv.  x: (B, L, d_in); w: (K, d_in)."""
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)                 # (B, L+K-1, d_in)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+              for i in range(k))
+    return out + b.astype(x.dtype), xp[:, -(k - 1):] if k > 1 else tail
+
+
+def mamba_apply(params, x, *, cfg: ModelConfig, impl: str = "auto",
+                return_state: bool = False):
+    """Full-sequence forward.  x: (B, L, d_model) -> (B, L, d_model).
+
+    ``return_state=True`` (prefill) also returns the :class:`MambaState`
+    after the last position, using the oracle scan (which threads state).
+    """
+    mc = cfg.mamba or MambaConfig()
+    dt_rank = mc.resolved_dt_rank(cfg.d_model)
+    xz = dense_apply(params["in_proj"], x)
+    xs_raw, z = jnp.split(xz, 2, axis=-1)                   # (B, L, d_in) each
+    xs, tail = _causal_conv(xs_raw, params["conv_w"], params["conv_b"])
+    xs = jax.nn.silu(xs)
+    x_dbl = dense_apply(params["x_proj"], xs)
+    dt, bmat, cmat = jnp.split(x_dbl, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"]["w"].astype(dt.dtype)
+                         + params["dt_proj"]["b"].astype(dt.dtype))
+    a = -jnp.exp(params["a_log"])
+    if return_state:
+        y, h_final = ref.ssm_scan(xs, dt, a, bmat, cmat, params["d"])
+        k = params["conv_w"].shape[0]
+        tail = xs_raw[:, -(k - 1):] if k > 1 else xs_raw[:, :0]
+        state = MambaState(conv=tail, ssm=h_final)
+        y = y * jax.nn.silu(z)
+        return dense_apply(params["out_proj"], y), state
+    y = ops.ssm_scan(xs, dt, a, bmat, cmat, params["d"], impl=impl)
+    y = y * jax.nn.silu(z)
+    return dense_apply(params["out_proj"], y)
+
+
+def mamba_init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> MambaState:
+    mc = cfg.mamba or MambaConfig()
+    d_in = mc.expand * cfg.d_model
+    return MambaState(
+        conv=jnp.zeros((batch, mc.d_conv - 1, d_in), dtype),
+        ssm=jnp.zeros((batch, d_in, mc.d_state), jnp.float32),
+    )
+
+
+def mamba_decode(params, x, state: MambaState, *, cfg: ModelConfig):
+    """One-token step.  x: (B, 1, d_model) -> (y, new_state)."""
+    mc = cfg.mamba or MambaConfig()
+    dt_rank = mc.resolved_dt_rank(cfg.d_model)
+    xz = dense_apply(params["in_proj"], x)
+    xs, z = jnp.split(xz, 2, axis=-1)
+    xs, new_tail = _causal_conv(xs, params["conv_w"], params["conv_b"],
+                                tail=state.conv.astype(xs.dtype))
+    xs = jax.nn.silu(xs)
+    x_dbl = dense_apply(params["x_proj"], xs)
+    dt, bmat, cmat = jnp.split(x_dbl, [dt_rank, dt_rank + mc.d_state], axis=-1)
+    dt = jax.nn.softplus(dt @ params["dt_proj"]["w"].astype(dt.dtype)
+                         + params["dt_proj"]["b"].astype(dt.dtype))
+    a = -jnp.exp(params["a_log"])
+    # single recurrent step in f32
+    u_t = xs[:, 0].astype(jnp.float32)
+    dt_t = dt[:, 0].astype(jnp.float32)
+    b_t = bmat[:, 0].astype(jnp.float32)
+    c_t = cmat[:, 0].astype(jnp.float32)
+    da = jnp.exp(dt_t[..., None] * a[None])                 # (B, d_in, N)
+    h = da * state.ssm + (dt_t * u_t)[..., None] * b_t[:, None, :]
+    y_t = jnp.sum(h * c_t[:, None, :], axis=-1) + params["d"][None] * u_t
+    y = (y_t[:, None].astype(x.dtype)) * jax.nn.silu(z)
+    new_state = MambaState(new_tail.astype(state.conv.dtype), h)
+    return dense_apply(params["out_proj"], y), new_state

@@ -1,0 +1,278 @@
+"""xLSTM blocks: mLSTM (matrix memory, parallel-form training) and sLSTM
+(scalar memory, inherently recurrent) — [arXiv:2405.04517].
+
+mLSTM trains with the stabilized parallel (quadratic gate-matrix) form and
+decodes with the exact O(1) recurrent form; sLSTM is sequential by design
+(h_{t-1} feeds the gates) and runs under ``lax.scan``.  The recurrent states
+are the inter-block "latents" the placement engine ships between nodes.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, XLSTMConfig
+from repro.nn import initializers as init
+from repro.nn.linear import dense_apply, dense_init
+
+NEG_INF = -1e30
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array    # (B, H, dv, dk) matrix memory
+    n: jax.Array    # (B, H, dk) normalizer
+    m: jax.Array    # (B, H) stabilizer
+
+
+class SLSTMState(NamedTuple):
+    h: jax.Array    # (B, d_in)
+    c: jax.Array    # (B, d_in)
+    n: jax.Array    # (B, d_in)
+    m: jax.Array    # (B, d_in)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    xc = cfg.xlstm or XLSTMConfig()
+    d = cfg.d_model
+    d_in = int(xc.proj_factor * d)
+    h = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "up": dense_init(ks[0], d, 2 * d_in, dtype=dtype),
+        "conv_w": init.lecun_normal(ks[1], (xc.conv_kernel, d_in), dtype),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "wq": dense_init(ks[2], d_in, d_in, dtype=dtype),
+        "wk": dense_init(ks[3], d_in, d_in, dtype=dtype),
+        "wv": dense_init(ks[4], d_in, d_in, dtype=dtype),
+        "w_if": dense_init(ks[5], d_in, 2 * h, dtype=dtype),
+        "down": dense_init(ks[6], d_in, d,
+                           stddev=d_in ** -0.5 / max(1, 2 * cfg.num_layers) ** 0.5,
+                           dtype=dtype),
+    }
+
+
+def _conv_silu(x, w, b, tail=None):
+    k = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None].astype(x.dtype)
+              for i in range(k))
+    new_tail = xp[:, -(k - 1):] if k > 1 else tail
+    return jax.nn.silu(out + b.astype(x.dtype)), new_tail
+
+
+def _heads(x, h):
+    b, s, d = x.shape
+    return x.reshape(b, s, h, d // h)
+
+
+def mlstm_apply(params, x, *, cfg: ModelConfig):
+    """Parallel-form training/prefill.  x: (B, S, d_model)."""
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    xz = dense_apply(params["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)                       # (B, S, d_in)
+    xc, _ = _conv_silu(xm, params["conv_w"], params["conv_b"])
+    q = _heads(dense_apply(params["wq"], xc), h).astype(jnp.float32)
+    k = _heads(dense_apply(params["wk"], xc), h).astype(jnp.float32)
+    v = _heads(dense_apply(params["wv"], xm), h).astype(jnp.float32)
+    dk = q.shape[-1]
+
+    gif = dense_apply(params["w_if"], xm).astype(jnp.float32)  # (B, S, 2H)
+    log_i, f_raw = jnp.split(gif, 2, axis=-1)               # (B, S, H)
+    log_f = -jax.nn.softplus(-f_raw)                        # log sigmoid
+
+    # gate matrix D: d_ts = cum_f_t - cum_f_s + log_i_s  (s <= t)
+    cum_f = jnp.cumsum(log_f, axis=1)                       # (B, S, H)
+    d_mat = (cum_f[:, :, None, :] - cum_f[:, None, :, :]
+             + log_i[:, None, :, :])                        # (B, T, S, H)
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    d_mat = jnp.where(causal[None, :, :, None], d_mat, NEG_INF)
+    m = jnp.max(d_mat, axis=2)                              # (B, T, H)
+    d_stab = jnp.exp(d_mat - m[:, :, None, :])
+
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * dk ** -0.5
+    smat = scores * d_stab                                  # (B, T, S, H)
+    norm = jnp.maximum(jnp.abs(jnp.sum(smat, axis=2)), jnp.exp(-m))  # (B,T,H)
+    hcell = jnp.einsum("btsh,bshd->bthd", smat, v) / norm[..., None]
+    hcell = hcell.reshape(b, s, -1).astype(x.dtype)
+
+    y = hcell * jax.nn.silu(z)
+    return dense_apply(params["down"], y)
+
+
+def mlstm_apply_with_state(params, x, *, cfg: ModelConfig):
+    """Prefill: parallel forward + closed-form final recurrent state.
+
+    The final state after S steps has the closed form
+    C_S = sum_s exp(w_s - m) v_s k_s^T,  n_S = sum_s exp(w_s - m) k_s,
+    with w_s = cumF_S - cumF_s + log_i_s and m = max_s w_s — no scan needed.
+    Returns (y, MLSTMState, conv_tail).
+    """
+    xc = cfg.xlstm or XLSTMConfig()
+    h = cfg.num_heads
+    b, s, _ = x.shape
+    xz = dense_apply(params["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xconv, _ = _conv_silu(xm, params["conv_w"], params["conv_b"])
+    q = _heads(dense_apply(params["wq"], xconv), h).astype(jnp.float32)
+    k = _heads(dense_apply(params["wk"], xconv), h).astype(jnp.float32)
+    v = _heads(dense_apply(params["wv"], xm), h).astype(jnp.float32)
+    dk = q.shape[-1]
+
+    gif = dense_apply(params["w_if"], xm).astype(jnp.float32)
+    log_i, f_raw = jnp.split(gif, 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)
+    cum_f = jnp.cumsum(log_f, axis=1)
+
+    # parallel output (same as mlstm_apply)
+    d_mat = (cum_f[:, :, None, :] - cum_f[:, None, :, :] + log_i[:, None, :, :])
+    causal = jnp.tril(jnp.ones((s, s), bool))
+    d_mat = jnp.where(causal[None, :, :, None], d_mat, NEG_INF)
+    m = jnp.max(d_mat, axis=2)
+    d_stab = jnp.exp(d_mat - m[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", q, k) * dk ** -0.5
+    smat = scores * d_stab
+    norm = jnp.maximum(jnp.abs(jnp.sum(smat, axis=2)), jnp.exp(-m))
+    hcell = jnp.einsum("btsh,bshd->bthd", smat, v) / norm[..., None]
+    hcell = hcell.reshape(b, s, -1).astype(x.dtype)
+    y = dense_apply(params["down"], hcell * jax.nn.silu(z))
+
+    # closed-form final state
+    w = cum_f[:, -1:, :] - cum_f + log_i                    # (B, S, H)
+    m_fin = jnp.max(w, axis=1)                              # (B, H)
+    wexp = jnp.exp(w - m_fin[:, None, :])
+    c_fin = jnp.einsum("bsh,bshv,bshk->bhvk", wexp, v, k)
+    n_fin = jnp.einsum("bsh,bshk->bhk", wexp, k)
+    kk = params["conv_w"].shape[0]
+    tail = xm[:, -(kk - 1):] if kk > 1 else xm[:, :0]
+    return y, MLSTMState(c_fin, n_fin, m_fin), tail
+
+
+def mlstm_init_state(cfg: ModelConfig, batch: int) -> MLSTMState:
+    xc = cfg.xlstm or XLSTMConfig()
+    d_in = int(xc.proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    dh = d_in // h
+    return MLSTMState(
+        c=jnp.zeros((batch, h, dh, dh), jnp.float32),
+        n=jnp.zeros((batch, h, dh), jnp.float32),
+        m=jnp.full((batch, h), NEG_INF, jnp.float32),
+    )
+
+
+def mlstm_decode(params, x, state: MLSTMState, *, cfg: ModelConfig,
+                 conv_tail=None):
+    """Exact recurrent step.  x: (B, 1, d_model) -> (y, new_state, tail)."""
+    h = cfg.num_heads
+    b = x.shape[0]
+    xz = dense_apply(params["up"], x)
+    xm, z = jnp.split(xz, 2, axis=-1)
+    xc, new_tail = _conv_silu(xm, params["conv_w"], params["conv_b"], conv_tail)
+    q = _heads(dense_apply(params["wq"], xc), h)[:, 0].astype(jnp.float32)
+    k = _heads(dense_apply(params["wk"], xc), h)[:, 0].astype(jnp.float32)
+    v = _heads(dense_apply(params["wv"], xm), h)[:, 0].astype(jnp.float32)
+    dk = q.shape[-1]
+
+    gif = dense_apply(params["w_if"], xm)[:, 0].astype(jnp.float32)
+    log_i, f_raw = jnp.split(gif, 2, axis=-1)               # (B, H)
+    log_f = -jax.nn.softplus(-f_raw)
+
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)                            # (B, H)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c_new = (f_p[..., None, None] * state.c
+             + i_p[..., None, None] * jnp.einsum("bhv,bhk->bhvk", v, k))
+    n_new = f_p[..., None] * state.n + i_p[..., None] * k
+    qs = q * dk ** -0.5
+    num = jnp.einsum("bhvk,bhk->bhv", c_new, qs)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, qs)),
+                      jnp.exp(-m_new))
+    hcell = (num / den[..., None]).reshape(b, 1, -1).astype(x.dtype)
+    y = hcell * jax.nn.silu(z)
+    return dense_apply(params["down"], y), MLSTMState(c_new, n_new, m_new), new_tail
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, *, dtype=jnp.float32):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    ks = jax.random.split(key, 4)
+    return {
+        "wx": dense_init(ks[0], d, 4 * d, dtype=dtype),
+        # block-diagonal recurrent matrix, one (dh, 4dh) block per head
+        "r": init.normal(ks[1], (h, dh, 4 * dh), dh ** -0.5, dtype),
+        "up": dense_init(ks[2], d, 2 * d, dtype=dtype),
+        "down": dense_init(ks[3], d, d,
+                           stddev=d ** -0.5 / max(1, 2 * cfg.num_layers) ** 0.5,
+                           dtype=dtype),
+    }
+
+
+def _slstm_cell(params, x_t, state: SLSTMState, h_heads: int):
+    """x_t: (B, d); exponential-gated scalar-memory LSTM step (stabilized)."""
+    b, d = x_t.shape
+    dh = d // h_heads
+    h_prev = state.h.reshape(b, h_heads, dh)
+    rec = jnp.einsum("bhd,hdk->bhk", h_prev.astype(jnp.float32),
+                     params["r"].astype(jnp.float32))      # (B, H, 4*dh)
+    rec = rec.reshape(b, h_heads, 4, dh).transpose(0, 2, 1, 3).reshape(b, 4 * d)
+    z = (dense_apply(params["wx"], x_t).astype(jnp.float32) + rec)
+    zi, zf, zz, zo = jnp.split(z, 4, axis=-1)               # (B, d) each
+    log_i = zi
+    log_f = -jax.nn.softplus(-zf)
+    m_new = jnp.maximum(log_f + state.m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + state.m - m_new)
+    c_new = f_p * state.c + i_p * jnp.tanh(zz)
+    n_new = f_p * state.n + i_p
+    h_new = jax.nn.sigmoid(zo) * c_new / jnp.maximum(n_new, 1e-6)
+    return SLSTMState(h_new, c_new, n_new, m_new)
+
+
+def slstm_apply(params, x, *, cfg: ModelConfig, return_state: bool = False):
+    """Sequential forward (lax.scan).  x: (B, S, d_model)."""
+    b, s, d = x.shape
+    state = slstm_init_state(cfg, b)
+
+    def step(carry, x_t):
+        carry = _slstm_cell(params, x_t, carry, cfg.num_heads)
+        return carry, carry.h
+
+    final, hs = jax.lax.scan(step, state, jnp.moveaxis(x.astype(jnp.float32), 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).astype(x.dtype)             # (B, S, d)
+    u, g = jnp.split(dense_apply(params["up"], hs), 2, axis=-1)
+    y = dense_apply(params["down"], u * jax.nn.gelu(g))
+    if return_state:
+        return y, final
+    return y
+
+
+def slstm_init_state(cfg: ModelConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        h=jnp.zeros((batch, d), jnp.float32),
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, d), NEG_INF, jnp.float32),
+    )
+
+
+def slstm_decode(params, x, state: SLSTMState, *, cfg: ModelConfig):
+    """One-token step.  x: (B, 1, d_model)."""
+    new_state = _slstm_cell(params, x[:, 0].astype(jnp.float32), state,
+                            cfg.num_heads)
+    hs = new_state.h[:, None].astype(x.dtype)
+    u, g = jnp.split(dense_apply(params["up"], hs), 2, axis=-1)
+    return dense_apply(params["down"], u * jax.nn.gelu(g)), new_state

@@ -1,0 +1,21 @@
+from repro.optim.compression import (  # noqa: F401
+    EFState,
+    compress_grads,
+    dequantize_int8,
+    init_error_feedback,
+    quantize_int8,
+)
+from repro.optim.optimizers import (  # noqa: F401
+    OptState,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    global_norm,
+    sgd,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant,
+    cosine_decay,
+    exponential_decay,
+    linear_warmup,
+)

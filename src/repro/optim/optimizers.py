@@ -1,0 +1,108 @@
+"""Optimizers as (init, update) pairs over arbitrary param pytrees.
+
+AdamW keeps f32 first/second moments regardless of param dtype (the dry-run
+shards them with the same PartitionSpecs as the params — ZeRO-style).  All
+updates are pure; ``apply_updates`` is separate so gradient transformations
+(clipping, compression, accumulation) compose by function composition.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def adamw(learning_rate: Callable[[jax.Array], jax.Array] | float,
+          b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.0,
+          wd_mask: Optional[Callable[[Any], Any]] = None):
+    """Returns (init_fn, update_fn)."""
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init_fn(params) -> OptState:
+        zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree_util.tree_map(zeros32, params),
+                        nu=jax.tree_util.tree_map(zeros32, params))
+
+    def update_fn(grads, state: OptState, params):
+        step = state.step + 1
+        lr = lr_fn(step)
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.mu)
+        flat_v = treedef.flatten_up_to(state.nu)
+        flat_p = treedef.flatten_up_to(params)
+        if wd_mask is not None:
+            mask = treedef.flatten_up_to(wd_mask(params))
+        else:
+            mask = [True] * len(flat_g)
+
+        outs, new_m, new_v = [], [], []
+        for g, m, v, p, wd_on in zip(flat_g, flat_m, flat_v, flat_p, mask):
+            g32 = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g32
+            v = b2 * v + (1 - b2) * g32 * g32
+            u = (m / b1c) / (jnp.sqrt(v / b2c) + eps)
+            if weight_decay and wd_on:
+                u = u + weight_decay * p.astype(jnp.float32)
+            outs.append((-lr * u).astype(p.dtype))
+            new_m.append(m)
+            new_v.append(v)
+        updates = jax.tree_util.tree_unflatten(treedef, outs)
+        mu = jax.tree_util.tree_unflatten(treedef, new_m)
+        nu = jax.tree_util.tree_unflatten(treedef, new_v)
+        return updates, OptState(step, mu, nu)
+
+    return init_fn, update_fn
+
+
+def sgd(learning_rate: Callable[[jax.Array], jax.Array] | float,
+        momentum: float = 0.0):
+    lr_fn = learning_rate if callable(learning_rate) else (lambda _: learning_rate)
+
+    def init_fn(params) -> OptState:
+        mu = jax.tree_util.tree_map(lambda p: jnp.zeros(p.shape, jnp.float32), params) \
+            if momentum else None
+        return OptState(step=jnp.zeros((), jnp.int32), mu=mu, nu=None)
+
+    def update_fn(grads, state: OptState, params):
+        step = state.step + 1
+        lr = lr_fn(step)
+        if momentum:
+            mu = jax.tree_util.tree_map(
+                lambda m, g: momentum * m + g.astype(jnp.float32), state.mu, grads)
+            updates = jax.tree_util.tree_map(
+                lambda m, p: (-lr * m).astype(p.dtype), mu, params)
+            return updates, OptState(step, mu, None)
+        updates = jax.tree_util.tree_map(
+            lambda g, p: (-lr * g.astype(jnp.float32)).astype(p.dtype), grads, params)
+        return updates, OptState(step, None, None)
+
+    return init_fn, update_fn
+
+
+def apply_updates(params, updates):
+    return jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) + u.astype(jnp.float32)).astype(p.dtype),
+        params, updates)

@@ -1,0 +1,32 @@
+"""Learning-rate schedules (pure fns of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup(lr: float, warmup_steps: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return lr * jnp.minimum(1.0, s / max(1, warmup_steps))
+    return fn
+
+
+def cosine_decay(lr: float, warmup_steps: int, total_steps: int,
+                 final_fraction: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(1, warmup_steps))
+        frac = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_fraction + (1 - final_fraction) * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr * warm * cos
+    return fn
+
+
+def exponential_decay(lr: float, decay_rate: float, decay_steps: int):
+    def fn(step):
+        return lr * decay_rate ** (step.astype(jnp.float32) / decay_steps)
+    return fn

@@ -1,0 +1,3 @@
+from repro.rl.d3ql import D3QLAgent, D3QLConfig  # noqa: F401
+from repro.rl.networks import qnet_apply, qnet_init  # noqa: F401
+from repro.rl.replay import ReplayMemory  # noqa: F401

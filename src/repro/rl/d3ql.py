@@ -1,0 +1,140 @@
+"""D3QL: Double + Dueling Deep Q-Learning (paper §III, eqs. 3–5, Table II).
+
+Double-Q target (eq. 3): a' from the *online* net, evaluated by the *target*
+net.  Dueling heads live in :mod:`repro.rl.networks` (eq. 4).  Updates follow
+(5) with Adam at lr 8e-4, batch 32, gamma 0.9, target sync every 150 steps,
+epsilon-greedy with multiplicative decay 0.99995 to floor 1e-5.  The update
+step is jitted; action masks restrict per-UE argmax (used by the MP/FP
+baselines and capacity masking).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+from repro.rl.networks import qnet_apply, qnet_init
+from repro.rl.replay import ReplayMemory
+
+
+@dataclasses.dataclass
+class D3QLConfig:
+    obs_dim: int = 64
+    num_ues: int = 15
+    num_actions: int = 17            # {null} ∪ N
+    history: int = 3                 # H (Table II)
+    lstm_units: int = 128
+    fc: tuple = (128, 64, 32)
+    memory_capacity: int = 5_000
+    batch_size: int = 32
+    gamma: float = 0.9
+    learning_rate: float = 8e-4
+    epsilon_floor: float = 1e-5      # eps_tilde
+    epsilon_decay: float = 0.99995   # eps'
+    target_sync: int = 150
+    grad_clip: float = 10.0
+    seed: int = 0
+
+
+class D3QLAgent:
+    def __init__(self, cfg: D3QLConfig):
+        self.cfg = cfg
+        key = jax.random.PRNGKey(cfg.seed)
+        self.params = qnet_init(key, cfg.obs_dim, cfg.num_ues, cfg.num_actions,
+                                lstm_units=cfg.lstm_units, fc=cfg.fc)
+        self.target_params = jax.tree_util.tree_map(jnp.copy, self.params)
+        self._opt_init, self._opt_update = adamw(cfg.learning_rate, b1=0.9,
+                                                 b2=0.999, weight_decay=0.0)
+        self.opt_state = self._opt_init(self.params)
+        self.memory = ReplayMemory(
+            cfg.memory_capacity,
+            obs_shape=(cfg.history, cfg.obs_dim),
+            action_shape=(cfg.num_ues,),
+            seed=cfg.seed)
+        self.epsilon = 1.0
+        self.steps = 0
+        self.rng = np.random.default_rng(cfg.seed)
+        self._update = self._build_update()
+        self._qvals = jax.jit(functools.partial(
+            qnet_apply, num_ues=cfg.num_ues, num_actions=cfg.num_actions))
+
+    # -- acting --------------------------------------------------------------
+
+    def act(self, obs_hist: np.ndarray, *, greedy: bool = False,
+            mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """obs_hist: (H, obs_dim) -> per-UE actions (U,) int in [0, A).
+
+        Action 0 is the null action; action n+1 places on BS n.
+        ``mask``: (U, A) bool — False entries are disallowed.
+        """
+        cfg = self.cfg
+        explore = (not greedy) and (self.rng.random() < self.epsilon)
+        if explore:
+            q = self.rng.random((cfg.num_ues, cfg.num_actions)).astype(np.float32)
+        else:
+            q = np.asarray(self._qvals(self.params, obs_hist[None])[0])
+        if mask is not None:
+            q = np.where(mask, q, -np.inf)
+        return q.argmax(axis=-1).astype(np.int32)
+
+    def decay_epsilon(self) -> None:
+        self.epsilon = max(self.cfg.epsilon_floor,
+                           self.epsilon * self.cfg.epsilon_decay)
+
+    # -- learning ------------------------------------------------------------
+
+    def _build_update(self):
+        cfg = self.cfg
+
+        def loss_fn(params, target_params, batch):
+            q = qnet_apply(params, batch["obs"], num_ues=cfg.num_ues,
+                           num_actions=cfg.num_actions)          # (B, U, A)
+            q_sel = jnp.take_along_axis(
+                q, batch["actions"][..., None], axis=-1)[..., 0]  # (B, U)
+            q_tot = q_sel.sum(axis=-1)                            # VDN sum
+
+            # double-Q: argmax online, evaluate target (eq. 3)
+            q_next_online = qnet_apply(params, batch["next_obs"],
+                                       num_ues=cfg.num_ues,
+                                       num_actions=cfg.num_actions)
+            a_star = jnp.argmax(q_next_online, axis=-1)           # (B, U)
+            q_next_target = qnet_apply(target_params, batch["next_obs"],
+                                       num_ues=cfg.num_ues,
+                                       num_actions=cfg.num_actions)
+            q_next = jnp.take_along_axis(
+                q_next_target, a_star[..., None], axis=-1)[..., 0].sum(axis=-1)
+            y = batch["rewards"] + cfg.gamma * (1.0 - batch["dones"]) * \
+                jax.lax.stop_gradient(q_next)
+            td = y - q_tot
+            return jnp.mean(td ** 2)
+
+        @jax.jit
+        def update(params, target_params, opt_state, batch):
+            loss, grads = jax.value_and_grad(loss_fn)(params, target_params, batch)
+            grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+            updates, opt_state = self._opt_update(grads, opt_state, params)
+            params = apply_updates(params, updates)
+            return params, opt_state, loss, gnorm
+
+        return update
+
+    def train_step(self) -> Optional[float]:
+        cfg = self.cfg
+        if len(self.memory) < cfg.batch_size:
+            return None
+        batch = self.memory.sample(cfg.batch_size)
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        self.params, self.opt_state, loss, _ = self._update(
+            self.params, self.target_params, self.opt_state, batch)
+        self.steps += 1
+        if self.steps % cfg.target_sync == 0:
+            self.target_params = jax.tree_util.tree_map(jnp.copy, self.params)
+        return float(loss)
+
+    def remember(self, obs, action, reward, next_obs, done) -> None:
+        self.memory.push(obs, action, reward, next_obs, done)

@@ -1,0 +1,46 @@
+"""The paper's Q-approximator (Table II): LSTM(128) + FC(128, 64, 32) with
+dueling value/advantage heads (eq. 4), one advantage row per UE.
+
+Action factorization: the joint action a = (a_1..a_U), a_i in {null} ∪ N, is
+intractable as a flat space ((N+1)^U); we use per-UE heads over a shared
+torso with VDN-style summation Q_tot = Σ_i Q_i(a_i) — the standard practical
+reading of per-UE argmax in Algorithm 1 (see DESIGN.md §2 assumption log).
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import lstm_apply, lstm_init
+from repro.nn.linear import dense_apply, dense_init
+
+
+def qnet_init(key, obs_dim: int, num_ues: int, num_actions: int, *,
+              lstm_units: int = 128, fc: tuple = (128, 64, 32),
+              dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, len(fc) + 4)
+    params: Dict = {"lstm": lstm_init(ks[0], obs_dim, lstm_units, dtype=dtype)}
+    in_dim = lstm_units
+    for j, width in enumerate(fc):
+        params[f"fc{j}"] = dense_init(ks[j + 1], in_dim, width, bias=True, dtype=dtype)
+        in_dim = width
+    params["value"] = dense_init(ks[-2], in_dim, num_ues, bias=True, dtype=dtype)
+    params["adv"] = dense_init(ks[-1], in_dim, num_ues * num_actions, bias=True,
+                               dtype=dtype)
+    return params
+
+
+def qnet_apply(params, obs_hist, *, num_ues: int, num_actions: int):
+    """obs_hist: (B, H, obs_dim) -> Q-values (B, U, A) via dueling eq. (4)."""
+    hs, _ = lstm_apply(params["lstm"], obs_hist)
+    x = hs[:, -1]                                            # last hidden state
+    j = 0
+    while f"fc{j}" in params:
+        x = jax.nn.relu(dense_apply(params[f"fc{j}"], x))
+        j += 1
+    v = dense_apply(params["value"], x)                      # (B, U)
+    adv = dense_apply(params["adv"], x).reshape(x.shape[0], num_ues, num_actions)
+    q = v[..., None] + adv - jnp.mean(adv, axis=-1, keepdims=True)
+    return q

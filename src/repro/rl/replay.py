@@ -1,0 +1,43 @@
+"""Ring-buffer experience memory (capacity 5000, Table II)."""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import numpy as np
+
+
+class ReplayMemory:
+    def __init__(self, capacity: int, obs_shape: Tuple[int, ...],
+                 action_shape: Tuple[int, ...], seed: int = 0):
+        self.capacity = capacity
+        self.obs = np.zeros((capacity, *obs_shape), np.float32)
+        self.next_obs = np.zeros((capacity, *obs_shape), np.float32)
+        self.actions = np.zeros((capacity, *action_shape), np.int32)
+        self.rewards = np.zeros((capacity,), np.float32)
+        self.dones = np.zeros((capacity,), np.float32)
+        self.idx = 0
+        self.size = 0
+        self.rng = np.random.default_rng(seed)
+
+    def push(self, obs, action, reward, next_obs, done) -> None:
+        i = self.idx
+        self.obs[i] = obs
+        self.actions[i] = action
+        self.rewards[i] = reward
+        self.next_obs[i] = next_obs
+        self.dones[i] = float(done)
+        self.idx = (i + 1) % self.capacity
+        self.size = min(self.size + 1, self.capacity)
+
+    def sample(self, batch: int) -> Dict[str, np.ndarray]:
+        ids = self.rng.integers(0, self.size, size=batch)
+        return {
+            "obs": self.obs[ids],
+            "actions": self.actions[ids],
+            "rewards": self.rewards[ids],
+            "next_obs": self.next_obs[ids],
+            "dones": self.dones[ids],
+        }
+
+    def __len__(self) -> int:
+        return self.size

@@ -1,0 +1,8 @@
+from repro.serving.engine import (  # noqa: F401
+    EngineConfig,
+    NodeExecutor,
+    NodeSpec,
+    Request,
+    ServingEngine,
+)
+from repro.serving.kv_manager import KVPagePool, PageTable  # noqa: F401

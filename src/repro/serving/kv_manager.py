@@ -1,0 +1,93 @@
+"""Paged KV-cache manager for the LM-decode services.
+
+Pages of ``page_size`` positions are allocated from a fixed pool per node;
+a request's logical cache maps to a page table.  This keeps chain *migration*
+(the paper's latent hop between nodes) cheap to reason about: moving a chain
+ships only its live pages (C9 bytes = pages * page_bytes), and the free-list
+makes admission decisions capacity-aware.
+
+The manager tracks logical state; the physical arrays live in the node's
+device memory and are indexed by page id (the reduced CPU executor simply
+keeps them in a numpy pool).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PageTable:
+    rid: int
+    pages: List[int]
+    length: int = 0
+
+
+class KVPagePool:
+    def __init__(self, num_pages: int, page_size: int, *, kv_heads: int,
+                 head_dim: int, num_layers: int, dtype=np.float32):
+        self.num_pages = num_pages
+        self.page_size = page_size
+        self.free = list(range(num_pages))[::-1]
+        self.tables: Dict[int, PageTable] = {}
+        # physical pool: (pages, layers, 2, page_size, kv_heads, head_dim)
+        self.data = np.zeros(
+            (num_pages, num_layers, 2, page_size, kv_heads, head_dim), dtype)
+
+    # -- allocation -----------------------------------------------------------
+
+    def can_admit(self, expected_len: int) -> bool:
+        need = (expected_len + self.page_size - 1) // self.page_size
+        return len(self.free) >= need
+
+    def allocate(self, rid: int) -> PageTable:
+        assert rid not in self.tables
+        pt = PageTable(rid, [])
+        self.tables[rid] = pt
+        return pt
+
+    def append_token(self, rid: int) -> int:
+        """Reserve room for one more position; returns the page id used."""
+        pt = self.tables[rid]
+        if pt.length % self.page_size == 0:
+            if not self.free:
+                raise MemoryError("KV pool exhausted")
+            pt.pages.append(self.free.pop())
+        pt.length += 1
+        return pt.pages[-1]
+
+    def release(self, rid: int) -> None:
+        pt = self.tables.pop(rid, None)
+        if pt:
+            self.free.extend(pt.pages)
+
+    # -- migration (the C9 latent hop) -----------------------------------------
+
+    def extract(self, rid: int) -> Dict:
+        """Serialize a request's pages for shipping to another node."""
+        pt = self.tables[rid]
+        return {
+            "length": pt.length,
+            "pages": self.data[pt.pages].copy(),
+        }
+
+    def inject(self, rid: int, blob: Dict) -> None:
+        """Install shipped pages into this pool."""
+        n = blob["pages"].shape[0]
+        if len(self.free) < n:
+            raise MemoryError("KV pool exhausted on migration")
+        pt = self.allocate(rid)
+        pt.length = blob["length"]
+        pt.pages = [self.free.pop() for _ in range(n)]
+        self.data[pt.pages] = blob["pages"]
+
+    def migration_bytes(self, rid: int) -> int:
+        pt = self.tables[rid]
+        per_page = self.data[0].nbytes
+        return len(pt.pages) * per_page
+
+    @property
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages

@@ -1,0 +1,3 @@
+from repro.sim.env import IDLE, PENDING, EdgeSimulator, SimConfig  # noqa: F401
+from repro.sim.mobility import RandomWaypoint  # noqa: F401
+from repro.sim.quality import from_gdm_model, synthetic_curves  # noqa: F401

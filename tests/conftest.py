@@ -1,0 +1,15 @@
+"""Test fixtures.  NOTE: no XLA_FLAGS here — tests run on the single real
+CPU device by design; only launch/dryrun.py creates placeholder devices."""
+import os
+import sys
+
+# make `import repro` work regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

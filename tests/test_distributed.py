@@ -1,0 +1,151 @@
+"""Distributed-layer tests: sharding rules across all archs, HLO cost model
+correctness on a known module, roofline term arithmetic."""
+import re
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ASSIGNED_ARCHS, SHAPES, get_config
+from repro.distributed import model_flops_estimate, parse_collective_bytes
+from repro.distributed.hlo_cost import HLOModule, module_cost
+from repro.distributed.sharding import batch_spec, param_specs, spec_for_shape
+from repro.launch.mesh import make_host_mesh
+from repro.launch.steps import abstract_params
+
+
+class FakeMesh:
+    """Duck-typed mesh for spec assignment without jax devices."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def _check_divisible(spec: P, shape):
+    for dim, axis in enumerate(spec):
+        if axis is None:
+            continue
+        axes = axis if isinstance(axis, tuple) else (axis,)
+        size = 1
+        for a in axes:
+            size *= MESH.shape[a]
+        assert shape[dim] % size == 0, (spec, shape)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_specs_divisible_for_all_archs(arch):
+    """Every parameter of every FULL config gets a mesh-divisible spec."""
+    cfg = get_config(arch)
+    params_shape = abstract_params(cfg)
+    specs = param_specs(params_shape, MESH)
+    flat_p = jax.tree_util.tree_leaves_with_path(params_shape)
+    flat_s = jax.tree_util.tree_leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_p) == len(flat_s)
+    sharded = 0
+    for (path, leaf), spec in zip(flat_p, flat_s):
+        _check_divisible(spec, leaf.shape)
+        if any(a is not None for a in spec):
+            sharded += 1
+    # the bulk of parameters must actually be sharded
+    assert sharded >= 0.5 * len(flat_p)
+
+
+def test_spec_divisibility_fallback():
+    spec = spec_for_shape((20, 128), ("data", "model"), MESH)
+    assert spec == P(None, "model")          # 20 % 16 != 0 -> replicated dim
+
+
+def test_batch_spec_degrades_for_small_batches():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    assert batch_spec(mesh, 256, 1)[0] == ("pod", "data")
+    # 16 % 32 != 0 -> falls back to the largest single axis (data, 16-way);
+    # PartitionSpec normalizes 1-tuples to the bare name
+    assert batch_spec(mesh, 16, 1)[0] in ("data", ("data",))
+    assert batch_spec(mesh, 1, 1)[0] is None
+
+
+# ---------------------------------------------------------------------------
+# HLO cost model
+# ---------------------------------------------------------------------------
+
+SYNTH_HLO = """
+HloModule synth, is_scheduled=true
+
+%body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,8] get-tuple-element(%p), index=1
+  %d = f32[8,8] dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %ar = f32[8,8] all-reduce(%d), channel_id=1, replica_groups=[4,2]<=[8], to_apply=%sum
+  %one = s32[] constant(1)
+  %niv = s32[] add(%iv, %one)
+  ROOT %t = (s32[], f32[8,8]) tuple(%niv, %ar)
+}
+
+%cond (p: (s32[], f32[8,8])) -> pred[] {
+  %p = (s32[], f32[8,8]) parameter(0)
+  %iv = s32[] get-tuple-element(%p), index=0
+  %n = s32[] constant(5)
+  ROOT %lt = pred[] compare(%iv, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,8]) -> f32[8,8] {
+  %a = f32[8,8] parameter(0)
+  %zero = s32[] constant(0)
+  %t0 = (s32[], f32[8,8]) tuple(%zero, %a)
+  %w = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body
+  ROOT %out = f32[8,8] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_cost_counts_while_trips():
+    cost = module_cost(SYNTH_HLO)
+    # dot: 2*8*8*8 flops, x5 trips
+    assert cost.flops == pytest.approx(2 * 8 * 8 * 8 * 5)
+    # all-reduce: 2*bytes*(g-1)/g with g=4, bytes=256, x5
+    assert cost.coll_bytes == pytest.approx(2 * 256 * 3 / 4 * 5)
+
+
+def test_hlo_cost_on_real_compiled_matmul():
+    """Compiled single-device matmul: parsed flops == analytic."""
+    m, k, n = 32, 64, 48
+
+    def f(a, b):
+        return a @ b
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((m, k), jnp.float32),
+        jax.ShapeDtypeStruct((k, n), jnp.float32)).compile()
+    cost = module_cost(compiled.as_text())
+    assert cost.flops == pytest.approx(2 * m * k * n, rel=0.01)
+    # bytes: at least inputs+output once
+    min_bytes = 4 * (m * k + k * n + m * n)
+    assert cost.bytes >= min_bytes * 0.99
+
+
+def test_hlo_cost_scan_multiplies_real_module():
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+        y, _ = jax.lax.scan(body, x, None, length=7)
+        return y
+
+    compiled = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((16, 16), jnp.float32)).compile()
+    cost = module_cost(compiled.as_text())
+    assert cost.flops == pytest.approx(7 * 2 * 16 ** 3, rel=0.01)
+
+
+def test_model_flops_estimate_sane():
+    cfg = get_config("yi-6b")
+    tr = model_flops_estimate(cfg, SHAPES["train_4k"])
+    # 6ND ballpark: 6 * 6e9 * 1M tokens ~ 3.6e16-4.2e16
+    assert 2e16 < tr < 6e16
+    dec = model_flops_estimate(cfg, SHAPES["decode_32k"])
+    assert dec < tr / 1e3

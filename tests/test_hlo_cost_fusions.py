@@ -1,0 +1,81 @@
+"""Edge cases of the TPU-semantics fusion byte accounting in hlo_cost."""
+import pytest
+
+from repro.distributed.hlo_cost import HLOModule, module_cost
+
+SLICE_FUSION = """
+HloModule m, is_scheduled=true
+
+%fused_slice (param_0.1: f32[100,64], param_1.1: s32[]) -> f32[1,64] {
+  %param_0.1 = f32[100,64]{1,0} parameter(0)
+  %param_1.1 = s32[] parameter(1)
+  %c0 = s32[] constant(0)
+  ROOT %ds = f32[1,64]{1,0} dynamic-slice(%param_0.1, %param_1.1, %c0), dynamic_slice_sizes={1,64}
+}
+
+ENTRY %main (a: f32[100,64], i: s32[]) -> f32[1,64] {
+  %a = f32[100,64]{1,0} parameter(0)
+  %i = s32[] parameter(1)
+  ROOT %f = f32[1,64]{1,0} fusion(%a, %i), kind=kLoop, calls=%fused_slice
+}
+"""
+
+DUS_FUSION = """
+HloModule m, is_scheduled=true
+
+%fused_dus (param_0.1: f32[100,64], param_1.1: f32[1,64], param_2.1: s32[]) -> f32[100,64] {
+  %param_0.1 = f32[100,64]{1,0} parameter(0)
+  %param_1.1 = f32[1,64]{1,0} parameter(1)
+  %param_2.1 = s32[] parameter(2)
+  %c0 = s32[] constant(0)
+  ROOT %dus = f32[100,64]{1,0} dynamic-update-slice(%param_0.1, %param_1.1, %param_2.1, %c0)
+}
+
+ENTRY %main (a: f32[100,64], u: f32[1,64], i: s32[]) -> f32[100,64] {
+  %a = f32[100,64]{1,0} parameter(0)
+  %u = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[100,64]{1,0} fusion(%a, %u, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+REDUCE_FUSION = """
+HloModule m, is_scheduled=true
+
+%add (x: f32[], y: f32[]) -> f32[] {
+  %x = f32[] parameter(0)
+  %y = f32[] parameter(1)
+  ROOT %s = f32[] add(%x, %y)
+}
+
+%fused_reduce (param_0.1: f32[100,64]) -> f32[64] {
+  %param_0.1 = f32[100,64]{1,0} parameter(0)
+  %c = f32[] constant(0)
+  ROOT %r = f32[64]{0} reduce(%param_0.1, %c), dimensions={0}, to_apply=%add
+}
+
+ENTRY %main (a: f32[100,64]) -> f32[64] {
+  %a = f32[100,64]{1,0} parameter(0)
+  ROOT %f = f32[64]{0} fusion(%a), kind=kLoop, calls=%fused_reduce
+}
+"""
+
+
+def test_slice_only_fusion_charges_slice_bytes():
+    cost = module_cost(SLICE_FUSION)
+    # param read = slice (1*64*4) not the full (100*64*4); + result 1*64*4
+    # + the s32 index scalar
+    assert cost.bytes == pytest.approx(64 * 4 + 64 * 4 + 4)
+
+
+def test_dus_fusion_charges_written_region_in_place():
+    cost = module_cost(DUS_FUSION)
+    # target: 2 * update (read-modify-write of the row); update operand read:
+    # 1*64*4; result aliased (not charged)
+    assert cost.bytes == pytest.approx(2 * 64 * 4 + 64 * 4 + 4)
+
+
+def test_reduce_fusion_charges_full_operand():
+    cost = module_cost(REDUCE_FUSION)
+    # reductions really read the whole operand
+    assert cost.bytes == pytest.approx(100 * 64 * 4 + 64 * 4)

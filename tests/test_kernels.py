@@ -1,0 +1,153 @@
+"""Per-kernel validation: Pallas (interpret=True) vs the pure-jnp oracle,
+swept over shapes and dtypes as required by the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+RNG = np.random.default_rng(42)
+
+
+def arr(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,sq,sk,h,kh,d", [
+    (1, 8, 8, 2, 2, 16),        # MHA tiny
+    (2, 16, 16, 4, 2, 32),      # GQA
+    (1, 24, 24, 8, 1, 16),      # MQA
+    (2, 8, 40, 8, 2, 32),       # cross-length (chunked prefill)
+    (1, 17, 23, 4, 4, 64),      # non-divisible seq (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(b, sq, sk, h, kh, d, dtype):
+    q, k, v = arr(b, sq, h, d, dtype=dtype), arr(b, sk, kh, d, dtype=dtype), \
+        arr(b, sk, kh, d, dtype=dtype)
+    off = max(sk - sq, 0)
+    out = ops.flash_attention(q, k, v, causal=True, q_offset=off,
+                              impl="interpret", block_q=8, block_k=8)
+    want = ref.attention(q, k, v, causal=True, q_offset=off)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_noncausal_and_window():
+    q, k, v = arr(2, 16, 4, 32), arr(2, 16, 2, 32), arr(2, 16, 2, 32)
+    for kwargs in [dict(causal=False), dict(causal=True, window=4)]:
+        out = ops.flash_attention(q, k, v, impl="interpret", block_q=8,
+                                  block_k=8, **kwargs)
+        want = ref.attention(q, k, v, **kwargs)
+        np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_causality_property():
+    """Output at position t must not depend on inputs after t."""
+    q, k, v = arr(1, 12, 2, 16), arr(1, 12, 2, 16), arr(1, 12, 2, 16)
+    base = ops.flash_attention(q, k, v, impl="interpret", block_q=4, block_k=4)
+    k2 = k.at[:, 8:].set(99.0)
+    v2 = v.at[:, 8:].set(-99.0)
+    pert = ops.flash_attention(q, k2, v2, impl="interpret", block_q=4, block_k=4)
+    np.testing.assert_allclose(base[:, :8], pert[:, :8], atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# decode_attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 16, 2, 2, 16),
+    (2, 64, 4, 2, 32),
+    (3, 40, 8, 8, 16),
+    (1, 128, 8, 1, 32),
+    (2, 33, 4, 1, 64),          # non-divisible cache length
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_decode_attention_matches_ref(b, s, h, kh, d, dtype):
+    q = arr(b, h, d, dtype=dtype)
+    kc, vc = arr(b, s, kh, d, dtype=dtype), arr(b, s, kh, d, dtype=dtype)
+    lens = jnp.asarray(RNG.integers(1, s + 1, size=(b,)), jnp.int32)
+    out = ops.decode_attention(q, kc, vc, lens, impl="interpret", block_k=16)
+    want = ref.decode_attention(q, kc, vc, lens)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_decode_attention_respects_lengths():
+    """Garbage beyond `length` must not leak into the output."""
+    q, kc, vc = arr(2, 4, 16), arr(2, 32, 2, 16), arr(2, 32, 2, 16)
+    lens = jnp.asarray([5, 9], jnp.int32)
+    base = ops.decode_attention(q, kc, vc, lens, impl="interpret", block_k=8)
+    kc2 = kc.at[0, 5:].set(1e3).at[1, 9:].set(1e3)
+    vc2 = vc.at[0, 5:].set(-1e3).at[1, 9:].set(-1e3)
+    pert = ops.decode_attention(q, kc2, vc2, lens, impl="interpret", block_k=8)
+    np.testing.assert_allclose(base, pert, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# ssm_scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,l,din,n", [
+    (1, 16, 32, 8),
+    (2, 32, 64, 8),
+    (1, 64, 32, 16),
+    (2, 48, 96, 4),             # chunk not dividing l -> divisor fallback
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ssm_scan_matches_ref(b, l, din, n, dtype):
+    u = arr(b, l, din, dtype=dtype)
+    dt = jnp.abs(arr(b, l, din, dtype=dtype)) * 0.1
+    a = -jnp.abs(arr(din, n))
+    bm, cm = arr(b, l, n, dtype=dtype), arr(b, l, n, dtype=dtype)
+    dv = arr(din)
+    y = ops.ssm_scan(u, dt, a, bm, cm, dv, impl="interpret", chunk=16, block_d=32)
+    want, _ = ref.ssm_scan(u, dt, a, bm, cm, dv)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 5e-4
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_ssm_scan_state_continuity():
+    """Oracle state threading: scan(L) == scan(L/2) -> scan(L/2, h0)."""
+    b, l, din, n = 2, 32, 16, 8
+    u, dt = arr(b, l, din), jnp.abs(arr(b, l, din)) * 0.1
+    a = -jnp.abs(arr(din, n))
+    bm, cm, dv = arr(b, l, n), arr(b, l, n), arr(din)
+    y_full, h_full = ref.ssm_scan(u, dt, a, bm, cm, dv)
+    y1, h1 = ref.ssm_scan(u[:, :16], dt[:, :16], a, bm[:, :16], cm[:, :16], dv)
+    y2, h2 = ref.ssm_scan(u[:, 16:], dt[:, 16:], a, bm[:, 16:], cm[:, 16:], dv,
+                          h0=h1)
+    np.testing.assert_allclose(jnp.concatenate([y1, y2], 1), y_full,
+                               atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h2, h_full, atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rmsnorm
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(4, 32), (3, 17, 96), (2, 5, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_matches_ref(shape, dtype):
+    x = arr(*shape, dtype=dtype)
+    sc = arr(shape[-1])
+    out = ops.rmsnorm(x, sc, impl="interpret", block_rows=8)
+    want = ref.rmsnorm(x, sc)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+def test_ops_auto_dispatches_to_xla_on_cpu():
+    q, k, v = arr(1, 8, 2, 16), arr(1, 8, 2, 16), arr(1, 8, 2, 16)
+    out = ops.flash_attention(q, k, v, impl="auto")
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(out, want, atol=1e-6)

@@ -1,0 +1,159 @@
+"""NN-module unit tests: shapes, dtypes, and train/decode equivalences."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import nn
+from repro.configs import MambaConfig, ModelConfig, XLSTMConfig
+
+KEY = jax.random.PRNGKey(0)
+CFG = ModelConfig(num_layers=2, d_model=32, num_heads=4, num_kv_heads=2,
+                  head_dim=8, d_ff=64, vocab_size=97)
+
+
+def test_dense_and_embedding():
+    p = nn.dense_init(KEY, 8, 16, bias=True)
+    y = nn.dense_apply(p, jnp.ones((3, 8)))
+    assert y.shape == (3, 16)
+    e = nn.embedding_init(KEY, 11, 8)
+    out = nn.embedding_apply(e, jnp.asarray([[1, 2], [3, 4]]))
+    assert out.shape == (2, 2, 8)
+    logits = nn.embedding_attend(e, out)
+    assert logits.shape == (2, 2, 11)
+
+
+def test_norms_match_direct_formula():
+    x = jax.random.normal(KEY, (4, 16))
+    p = nn.rmsnorm_init(16)
+    got = nn.rmsnorm_apply(p, x)
+    want = x / np.sqrt(np.mean(np.asarray(x) ** 2, -1, keepdims=True) + 1e-6)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+    lp = nn.layernorm_init(16)
+    ln = nn.layernorm_apply(lp, x)
+    np.testing.assert_allclose(np.mean(np.asarray(ln), -1), 0.0, atol=1e-5)
+
+
+def test_rope_preserves_norm_and_is_relative():
+    x = jax.random.normal(KEY, (1, 6, 2, 16))
+    pos = jnp.arange(6)[None]
+    y = nn.apply_rope(x, pos)
+    np.testing.assert_allclose(jnp.linalg.norm(y, axis=-1),
+                               jnp.linalg.norm(x, axis=-1), rtol=1e-5)
+    # relative property: <R(q,m), R(k,n)> depends only on m-n
+    q = jax.random.normal(KEY, (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    def dot(m, n):
+        qm = nn.apply_rope(q, jnp.asarray([[m]]))
+        kn = nn.apply_rope(k, jnp.asarray([[n]]))
+        return float(jnp.sum(qm * kn))
+    assert abs(dot(3, 1) - dot(7, 5)) < 1e-4
+
+
+def test_attention_full_vs_decode_equivalence():
+    p = nn.attention_init(KEY, CFG)
+    x = jax.random.normal(KEY, (2, 6, 32))
+    full = nn.attention_apply(p, x, cfg=CFG, impl="xla")
+    cache = nn.init_kv_cache(CFG, 2, 8, dtype=jnp.float32)
+    outs = []
+    for t in range(6):
+        y, cache = nn.attention_decode(p, x[:, t:t + 1], cache, cfg=CFG, impl="xla")
+        outs.append(y)
+    np.testing.assert_allclose(full, jnp.concatenate(outs, 1), atol=1e-4, rtol=1e-4)
+
+
+def test_attention_prefill_cache_matches_decode_cache():
+    p = nn.attention_init(KEY, CFG)
+    x = jax.random.normal(KEY, (2, 5, 32))
+    cache = nn.prefill_kv_cache(p, x, cfg=CFG, max_seq=8, dtype=jnp.float32)
+    cache2 = nn.init_kv_cache(CFG, 2, 8, dtype=jnp.float32)
+    for t in range(5):
+        _, cache2 = nn.attention_decode(p, x[:, t:t + 1], cache2, cfg=CFG, impl="xla")
+    np.testing.assert_allclose(cache.k[:, :5], cache2.k[:, :5], atol=1e-5)
+    np.testing.assert_allclose(np.asarray(cache.length), np.asarray(cache2.length))
+
+
+def test_moe_routes_topk_and_balances():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=64, num_experts=4, experts_per_token=2,
+                      moe_d_ff=48, moe_capacity_factor=8.0)
+    p = nn.moe_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 16, 32))
+    y, aux = nn.moe_apply(p, x, cfg=cfg)
+    assert y.shape == x.shape
+    assert float(aux) >= 1.0 - 1e-6          # Switch aux loss lower bound is 1
+    # capacity drop path: tiny capacity must still produce finite outputs
+    y2, _ = nn.moe_apply(p, x, cfg=cfg, capacity_factor=0.1)
+    assert bool(jnp.all(jnp.isfinite(y2)))
+
+
+def test_mamba_full_vs_decode():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=0, mamba=MambaConfig(d_state=8))
+    p = nn.mamba_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 6, 32))
+    full = nn.mamba_apply(p, x, cfg=cfg, impl="xla")
+    st = nn.mamba_init_state(cfg, 2)
+    outs = []
+    for t in range(6):
+        y, st = nn.mamba_decode(p, x[:, t:t + 1], st, cfg=cfg)
+        outs.append(y)
+    np.testing.assert_allclose(full, jnp.concatenate(outs, 1), atol=1e-4, rtol=1e-4)
+
+
+def test_mamba_prefill_state_continues_correctly():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=0, mamba=MambaConfig(d_state=8))
+    p = nn.mamba_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 8, 32))
+    full = nn.mamba_apply(p, x, cfg=cfg, impl="xla")
+    _, st = nn.mamba_apply(p, x[:, :6], cfg=cfg, return_state=True)
+    y6, st = nn.mamba_decode(p, x[:, 6:7], st, cfg=cfg)
+    np.testing.assert_allclose(full[:, 6:7], y6, atol=1e-4, rtol=1e-4)
+
+
+def test_mlstm_parallel_vs_recurrent_and_state():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=0, xlstm=XLSTMConfig())
+    p = nn.mlstm_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 6, 32))
+    full = nn.mlstm_apply(p, x, cfg=cfg)
+    st, tail = nn.mlstm_init_state(cfg, 2), None
+    outs = []
+    for t in range(6):
+        y, st, tail = nn.mlstm_decode(p, x[:, t:t + 1], st, cfg=cfg, conv_tail=tail)
+        outs.append(y)
+    np.testing.assert_allclose(full, jnp.concatenate(outs, 1), atol=1e-4, rtol=1e-3)
+    # closed-form prefill state == recurrent state
+    y2, st2, tail2 = nn.mlstm_apply_with_state(p, x, cfg=cfg)
+    np.testing.assert_allclose(full, y2, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(st.c, st2.c, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st.n, st2.n, atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st.m, st2.m, atol=1e-4, rtol=1e-3)
+
+
+def test_slstm_apply_vs_decode():
+    cfg = ModelConfig(num_layers=1, d_model=32, num_heads=4, num_kv_heads=4,
+                      d_ff=0, xlstm=XLSTMConfig())
+    p = nn.slstm_init(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 5, 32))
+    full, final = nn.slstm_apply(p, x, cfg=cfg, return_state=True)
+    st = nn.slstm_init_state(cfg, 2)
+    outs = []
+    for t in range(5):
+        y, st = nn.slstm_decode(p, x[:, t:t + 1], st, cfg=cfg)
+        outs.append(y)
+    np.testing.assert_allclose(full, jnp.concatenate(outs, 1), atol=1e-4, rtol=1e-3)
+    np.testing.assert_allclose(st.h, final.h, atol=1e-5)
+
+
+def test_lstm_gradient_flows():
+    p = nn.lstm_init(KEY, 8, 16)
+    xs = jax.random.normal(KEY, (2, 5, 8))
+
+    def loss(p):
+        hs, _ = nn.lstm_apply(p, xs)
+        return jnp.sum(hs ** 2)
+
+    g = jax.grad(loss)(p)
+    assert all(bool(jnp.any(v != 0)) for v in jax.tree_util.tree_leaves(g))

@@ -1,0 +1,196 @@
+"""Simulator invariants: constraint system C1-C9, collision semantics,
+mobility, quality curves — including hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    GreedyController,
+    LearnGDMController,
+    TraceRecorder,
+    check_all,
+    greedy_mac,
+    random_access,
+)
+from repro.core.constraints import check_c3_capacity, check_c5_no_bs_channel_reuse
+from repro.sim import IDLE, EdgeSimulator, RandomWaypoint, SimConfig, synthetic_curves
+
+
+def make_env(**kw):
+    return EdgeSimulator(SimConfig(**{"num_ues": 8, "horizon": 20, "seed": 3, **kw}))
+
+
+def test_static_world_matches_table2_ranges():
+    env = make_env()
+    cfg = env.cfg
+    assert cfg.num_bs == 16                             # 4x4 grid
+    assert np.all((env.w_hat >= 1) & (env.w_hat <= 3))  # U(1,3)
+    assert np.all((env.eps >= 1) & (env.eps <= 4))      # U(1,4)
+    assert np.all((env.qbar >= 0.1) & (env.qbar <= 0.5))
+    assert env.omega.shape == (cfg.num_services, cfg.max_blocks + 1)
+    assert np.all(np.diff(env.omega, axis=1) >= -1e-9)  # monotone quality
+    assert np.allclose(np.diag(env.y_hat), 0.0)
+    assert np.all(env.y_hat >= 0) and np.allclose(env.y_hat, env.y_hat.T)
+
+
+def test_quality_curves_shapes_and_bounds():
+    rng = np.random.default_rng(0)
+    c = synthetic_curves(3, 4, rng)
+    assert c.shape == (3, 5)
+    assert np.all(c[:, 0] == 0) and np.all(c <= 1.0)
+    assert np.all(np.diff(c, axis=1) >= 0)
+
+
+def test_mobility_stays_in_grid_and_moves():
+    rw = RandomWaypoint(10, grid=4, side=400.0, rng=np.random.default_rng(1))
+    areas0 = rw.area_of(rw.pos)
+    seen_move = False
+    for _ in range(50):
+        areas = rw.step()
+        assert np.all((areas >= 0) & (areas < 16))
+        if np.any(areas != areas0):
+            seen_move = True
+    assert seen_move
+
+
+def test_greedy_mac_respects_c5_and_priority():
+    env = make_env()
+    mac = greedy_mac(env)
+    # at most C channels per BS, all distinct per BS
+    for bs in range(env.cfg.num_bs):
+        used = mac[(env.poa == bs) & (mac >= 0)]
+        assert len(used) <= env.cfg.num_channels
+        assert len(np.unique(used)) == len(used)
+    # priority ordering: among UEs at the same BS needing uplink, the one
+    # closer below threshold gets a channel first
+    pr = env._priorities()
+    need = env.needs_uplink()
+    for bs in range(env.cfg.num_bs):
+        ues = np.where(need & (env.poa == bs))[0]
+        granted = [i for i in ues if mac[i] >= 0]
+        denied = [i for i in ues if mac[i] < 0]
+        if granted and denied:
+            assert min(pr[granted]) >= max(pr[denied]) - 1e-12
+
+
+def test_paper_priority_example():
+    """Paper §III: thresholds 0.5 -> Q=0.4 beats Q=0.3; threshold 0.25 ->
+    both clipped to the same floor priority."""
+    env = make_env(num_ues=2)
+    env.qbar[:] = 0.5
+    env.quality_now = np.array([0.3, 0.4])
+    env.blocks_done[:] = 1
+    env.omega[env.service_of[0], 1] = 0.3
+    env.omega[env.service_of[1], 1] = 0.4
+    pr = env._priorities()
+    assert pr[1] > pr[0]
+    env.qbar[:] = 0.25
+    pr = env._priorities()
+    assert pr[0] == pr[1] == pytest.approx(1e-8)
+
+
+def test_collisions_only_under_random_access():
+    cfg = SimConfig(num_ues=20, num_channels=1, horizon=30, seed=1)
+    env_g = EdgeSimulator(cfg)
+    ctrl = GreedyController(env_g)
+    ctrl.run_episode(seed=5)
+    assert env_g.num_collisions == 0                # controller MAC: collision-free
+
+    env_r = EdgeSimulator(cfg)
+    env_r.reset(seed=5)
+    collisions = 0
+    for _ in range(30):
+        mac = random_access(env_r)
+        res = env_r.step(mac, np.full(20, -1))
+        collisions = env_r.num_collisions
+    assert collisions > 0                           # ALOHA-style: collisions happen
+
+
+def test_c6_first_block_requires_prior_upload():
+    env = make_env(num_ues=4)
+    env.reset(seed=0)
+    # try to place immediately without any upload: nothing must execute
+    res = env.step(np.full(4, -1), np.zeros(4, dtype=int))
+    assert res["bs_load"].sum() == 0
+    # now upload (frame t), then place (frame t+1): blocks execute
+    mac = greedy_mac(env)
+    env.step(mac, np.full(4, -1))
+    res = env.step(np.full(4, -1), np.zeros(4, dtype=int))
+    assert res["bs_load"].sum() > 0
+
+
+def test_capacity_c3_enforced():
+    env = make_env(num_ues=8)
+    env.reset(seed=0)
+    env.w_hat[:] = 1
+    mac = greedy_mac(env)
+    env.step(mac, np.full(8, -1))
+    # all UEs target BS 0
+    res = env.step(np.full(8, -1), np.zeros(8, dtype=int))
+    assert res["bs_load"][0] <= 1
+
+
+def test_full_episode_trace_satisfies_constraints():
+    env = make_env(num_ues=10)
+    ctrl = LearnGDMController(env, variant="learn-gdm", seed=0)
+    tr = TraceRecorder()
+    ctrl.run_episode(train=False, seed=11, trace=tr)
+    assert check_all(tr, env.w_hat) == []
+
+
+def test_constraint_checkers_catch_injected_violations():
+    env = make_env(num_ues=4)
+    ctrl = LearnGDMController(env, variant="learn-gdm", seed=0)
+    tr = TraceRecorder()
+    ctrl.run_episode(train=False, seed=11, trace=tr)
+    # inject a capacity violation
+    tr.frames[0].bs_load[0] = env.w_hat[0] + 5
+    assert check_c3_capacity(tr, env.w_hat) != []
+    # inject a C5 violation
+    fr = tr.frames[1]
+    fr.uploaded[:2] = True
+    fr.mac[:2] = 0
+    fr.poa[:2] = 0
+    assert check_c5_no_bs_channel_reuse(tr) != []
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), ues=st.integers(2, 12),
+       channels=st.integers(1, 4))
+def test_property_episode_invariants(seed, ues, channels):
+    """Any seeded episode under any controller keeps blocks in range and the
+    recorded trace constraint-clean."""
+    env = EdgeSimulator(SimConfig(num_ues=ues, num_channels=channels,
+                                  horizon=10, seed=seed % 17))
+    ctrl = LearnGDMController(env, variant="learn-gdm", seed=seed % 13)
+    tr = TraceRecorder()
+    stats = ctrl.run_episode(train=False, seed=seed, trace=tr)
+    assert check_all(tr, env.w_hat) == []
+    assert np.all(env.blocks_done >= 0)
+    assert np.all(env.blocks_done <= env.cfg.max_blocks)
+    assert np.isfinite(stats.reward)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 1_000))
+def test_property_reward_decomposition(seed):
+    """reward == quality_gain - alpha*exec - beta*trans, every frame."""
+    env = EdgeSimulator(SimConfig(num_ues=6, horizon=8, seed=seed % 7))
+    env.reset(seed=seed)
+    rng = np.random.default_rng(seed)
+    for _ in range(8):
+        mac = greedy_mac(env)
+        placement = rng.integers(-1, env.cfg.num_bs, size=6)
+        res = env.step(mac, placement)
+        want = (res["quality_gain"] - env.cfg.alpha * res["exec_cost"]
+                - env.cfg.beta * res["trans_cost"])
+        assert res["reward"] == pytest.approx(want, abs=1e-9)
+
+
+def test_observation_dim_matches_eq7():
+    env = make_env(num_ues=5)
+    obs = env.observation()
+    cfg = env.cfg
+    want = 2 * cfg.num_bs + 2 * cfg.num_ues + cfg.num_ues * cfg.num_bs
+    assert obs.shape == (want,)
+    assert env.obs_dim == want
