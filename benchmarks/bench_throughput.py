@@ -1,0 +1,78 @@
+"""Rollout-engine throughput: scalar per-episode loop vs vectorized engine.
+
+Measures pure environment frames/sec at Table II scale (15 UEs, 16 BS,
+2 channels) — greedy MAC + seeded random placements, no agent in the loop —
+for the scalar ``EdgeSimulator`` and the ``VecEdgeSimulator`` at
+E ∈ {1, 8, 32}.  Pass criterion (ISSUE 1): vectorized E=32 ≥ 5× scalar.
+
+Env frames/sec is the substrate number every scaling PR builds on: at E=32
+one vectorized step replaces 32 interpreter round-trips of per-UE loops.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, save_csv, scaled
+from repro.core.mac import greedy_mac, vec_greedy_mac
+from repro.sim import EdgeSimulator, SimConfig, VecEdgeSimulator
+
+ENV_COUNTS = (1, 8, 32)
+
+
+def _scalar_fps(cfg: SimConfig, frames: int) -> float:
+    env = EdgeSimulator(cfg)
+    env.reset(seed=5)
+    rng = np.random.default_rng(2)
+    placements = rng.integers(-1, cfg.num_bs, size=(frames, cfg.num_ues))
+    t0 = time.perf_counter()
+    for t in range(frames):
+        if env.frame >= cfg.horizon:
+            env.reset(seed=5 + t)
+        env.step(greedy_mac(env), placements[t])
+    return frames / (time.perf_counter() - t0)
+
+
+def _vec_fps(cfg: SimConfig, num_envs: int, frames: int) -> float:
+    venv = VecEdgeSimulator(cfg, num_envs)
+    venv.reset(seeds=5 + np.arange(num_envs))
+    rng = np.random.default_rng(2)
+    steps = max(frames // num_envs, 1)
+    placements = rng.integers(-1, cfg.num_bs,
+                              size=(steps, num_envs, cfg.num_ues))
+    t0 = time.perf_counter()
+    for t in range(steps):
+        if venv.frame >= cfg.horizon:
+            venv.reset(seeds=5 + t + np.arange(num_envs))
+        venv.step(vec_greedy_mac(venv), placements[t])
+    return steps * num_envs / (time.perf_counter() - t0)
+
+
+def run(frames: int = 0, seed: int = 0) -> dict:
+    frames = frames or scaled(20_000, lo=2_000)
+    cfg = SimConfig(num_ues=15, num_channels=2, horizon=40, seed=seed)
+
+    scalar = _scalar_fps(cfg, frames)
+    rows = [("scalar", 1, scalar, 1.0)]
+    result = {"scalar_fps": scalar}
+    for e in ENV_COUNTS:
+        fps = _vec_fps(cfg, e, frames)
+        rows.append((f"vec_e{e}", e, fps, fps / scalar))
+        result[f"vec_e{e}_fps"] = fps
+        result[f"vec_e{e}_speedup"] = fps / scalar
+
+    save_csv("throughput", ["engine", "num_envs", "frames_per_sec", "speedup"],
+             rows)
+    emit("rollout_throughput", 1e6 / scalar,
+         "; ".join(f"E={e} {result[f'vec_e{e}_fps']:,.0f} f/s "
+                   f"({result[f'vec_e{e}_speedup']:.1f}x)"
+                   for e in ENV_COUNTS))
+    target = result["vec_e32_speedup"]
+    assert target >= 5.0, \
+        f"vectorized E=32 speedup {target:.1f}x below the 5x pass bar"
+    return result
+
+
+if __name__ == "__main__":
+    run()

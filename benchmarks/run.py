@@ -14,6 +14,8 @@ import traceback
 
 BENCHES = {
     "fig3": ("benchmarks.bench_convergence", "Fig. 3 reward/MSE convergence"),
+    "throughput": ("benchmarks.bench_throughput",
+                   "rollout frames/sec: scalar vs vectorized engine"),
     "fig4a": ("benchmarks.bench_users", "Fig. 4A quality vs #UEs"),
     "fig4b": ("benchmarks.bench_channels", "Fig. 4B quality vs #channels"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel micro-bench"),

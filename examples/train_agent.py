@@ -15,16 +15,25 @@ def main():
     ap.add_argument("--episodes", type=int, default=300)
     ap.add_argument("--ues", type=int, default=15)
     ap.add_argument("--channels", type=int, default=2)
+    ap.add_argument("--num-envs", type=int, default=1,
+                    help="stacked envs for the vectorized rollout engine "
+                         "(1 = scalar reference loop)")
     ap.add_argument("--out", default="results/train_agent_curve.csv")
     args = ap.parse_args()
 
     cfg = SimConfig(num_ues=args.ues, num_channels=args.channels,
                     horizon=40, seed=0)
     ctrl = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm", seed=0)
-    frames = args.episodes * cfg.horizon
+    # one epsilon decay per frame: the vectorized path steps E envs per frame
+    frames = ctrl.train_frames(args.episodes, num_envs=args.num_envs)
     ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(1e-2) / frames))
 
-    hist = ctrl.train(args.episodes, log_every=max(args.episodes // 10, 1))
+    log = max(args.episodes // 10, 1)
+    if args.num_envs > 1:
+        hist = ctrl.train_vectorized(args.episodes, num_envs=args.num_envs,
+                                     log_every=max(log // args.num_envs, 1))
+    else:
+        hist = ctrl.train(args.episodes, log_every=log)
 
     import os
     os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)

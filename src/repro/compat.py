@@ -1,0 +1,57 @@
+"""jax version-compat shims (single home for the compat policy).
+
+The repo targets the newest jax API; the pinned toolchain may lag (the
+baked-in image ships 0.4.37).  Policy: call sites import the newest-API
+symbol from THIS module, which falls back per installed version — never
+sprinkle try/except over the codebase.  Currently shimmed:
+
+* ``AxisType`` — ``jax.sharding.AxisType`` (added post-0.4.x); older jax
+  gets a stand-in enum accepted (and ignored) by :func:`make_mesh`.
+* ``make_mesh`` — drops the ``axis_types=`` kwarg when ``jax.make_mesh``
+  does not accept it.
+* ``shard_map`` — ``jax.shard_map`` vs ``jax.experimental.shard_map``;
+  translates ``check_vma=`` to the old ``check_rep=`` spelling.
+"""
+from __future__ import annotations
+
+import enum
+import inspect
+from typing import Optional, Tuple
+
+import jax
+
+try:
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+except ImportError:  # pragma: no cover - depends on installed jax
+    class AxisType(enum.Enum):
+        Auto = "auto"
+        Explicit = "explicit"
+        Manual = "manual"
+
+_MAKE_MESH_TAKES_AXIS_TYPES = (
+    "axis_types" in inspect.signature(jax.make_mesh).parameters)
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...], *,
+              axis_types: Optional[Tuple] = None, **kw):
+    """``jax.make_mesh`` that drops ``axis_types`` on older jax."""
+    if axis_types is not None and _MAKE_MESH_TAKES_AXIS_TYPES:
+        kw["axis_types"] = axis_types
+    return jax.make_mesh(shape, axes, **kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True, **kw):
+    """``jax.shard_map`` with the old experimental API as fallback.
+
+    The replication-check kwarg is picked by signature (``check_vma`` vs the
+    pre-rename ``check_rep``) — intermediate jax versions expose a top-level
+    ``shard_map`` that still spells it ``check_rep``.
+    """
+    if hasattr(jax, "shard_map"):
+        impl = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as impl
+    params = inspect.signature(impl).parameters
+    check_kw = "check_vma" if "check_vma" in params else "check_rep"
+    kw[check_kw] = check_vma
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

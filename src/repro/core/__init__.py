@@ -2,4 +2,5 @@
 from repro.core.baselines import GreedyController, opt_upper_bound  # noqa: F401
 from repro.core.constraints import TraceRecorder, check_all  # noqa: F401
 from repro.core.learn_gdm import EpisodeStats, LearnGDMController, summarize  # noqa: F401
-from repro.core.mac import greedy_mac, random_access  # noqa: F401
+from repro.core.mac import (greedy_mac, random_access, vec_greedy_mac,  # noqa: F401
+                            vec_random_access)

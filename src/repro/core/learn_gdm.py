@@ -24,9 +24,11 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from repro.core.constraints import TraceRecorder
-from repro.core.mac import greedy_mac, random_access
+from repro.core.mac import (greedy_mac, random_access, vec_greedy_mac,
+                            vec_random_access)
 from repro.rl.d3ql import D3QLAgent, D3QLConfig
 from repro.sim.env import IDLE, EdgeSimulator, SimConfig
+from repro.sim.vec_env import VecEdgeSimulator
 
 
 @dataclasses.dataclass
@@ -74,6 +76,24 @@ class LearnGDMController:
         elif self.variant == "fp":
             mid_chain = (env.blocks_done > 0) & (env.blocks_done < cfg.max_blocks)
             mask[mid_chain, 0] = False                  # no early exit
+        return mask
+
+    def action_mask_vec(self, venv: VecEdgeSimulator) -> np.ndarray:
+        """Batched action masks, (E, U, A) — same semantics as
+        :meth:`action_mask` per env, no per-UE loops."""
+        cfg = venv.cfg
+        e, u, a = venv.num_envs, cfg.num_ues, cfg.num_bs + 1
+        mask = np.ones((e, u, a), dtype=bool)
+        if self.variant == "mp":
+            started = venv.blocks_done.ravel() > 0
+            rows = mask.reshape(e * u, a)
+            rows[started] = False
+            rows[started, 0] = True                     # null (stop & deliver)
+            rows[started, venv.cur_node.ravel()[started] + 1] = True
+        elif self.variant == "fp":
+            mid_chain = (venv.blocks_done > 0) & \
+                (venv.blocks_done < cfg.max_blocks)
+            mask[..., 0][mid_chain] = False             # no early exit
         return mask
 
     # -- episode loops ---------------------------------------------------------
@@ -144,6 +164,78 @@ class LearnGDMController:
                 print(f"  ep {ep + 1:5d}  reward(avg {log_every})={recent:8.3f}  "
                       f"eps={self.agent.epsilon:.3f}")
         return hist
+
+    # -- vectorized training ---------------------------------------------------
+
+    def train_frames(self, episodes: int, *, num_envs: int = 1) -> int:
+        """Frames (= epsilon-decay / train steps) a :meth:`train` (E=1) or
+        :meth:`train_vectorized` run will execute — callers calibrating the
+        epsilon schedule should use this instead of re-deriving round math."""
+        rounds = -(-episodes // max(num_envs, 1)) if num_envs > 1 else episodes
+        return rounds * self.env.cfg.horizon
+
+    def _obs_hist_vec(self, history: deque, num_envs: int) -> np.ndarray:
+        h = self.agent.cfg.history
+        pads = [history[0]] * (h - len(history)) if history \
+            else [np.zeros((num_envs, self.env.obs_dim), np.float32)] * h
+        items = list(pads) + list(history)
+        return np.stack(items[-h:], axis=1)              # (E, H, obs_dim)
+
+    def train_vectorized(self, episodes: int, *, num_envs: int = 8,
+                         log_every: int = 0, seed0: int = 1_000,
+                         venv: Optional[VecEdgeSimulator] = None) -> Dict[str, list]:
+        """Algorithm 1 over E stacked envs: one batched act, one env step and
+        one (amortized) train step per frame collect E transitions.
+
+        Episode seeds tile ``seed0 + round * E + e`` so E=1 matches
+        :meth:`train`'s per-episode seeding.  All stacked envs share
+        ``self.env``'s static world (same ``cfg.seed`` draw) — like
+        :meth:`train`, episodes differ only in mobility/request streams, and
+        :meth:`evaluate` measures on the world that was trained on.  Returns
+        the same history dict as :meth:`train` with one entry per episode
+        (``rounds * num_envs``, trimmed to ``episodes``).
+        """
+        agent = self.agent
+        venv = venv or VecEdgeSimulator(
+            self.env.cfg, num_envs,
+            seeds=np.full(num_envs, self.env.cfg.seed))
+        num_envs = venv.num_envs
+        rounds = -(-episodes // num_envs)
+        hist = {"reward": [], "loss": [], "delivered": []}
+        for rd in range(rounds):
+            venv.reset(seeds=seed0 + rd * num_envs + np.arange(num_envs))
+            history: deque = deque(maxlen=agent.cfg.history)
+            history.append(venv.observation())
+            ep_reward = np.zeros(num_envs)
+            losses: List[float] = []
+            done = False
+            while not done:
+                obs_hist = self._obs_hist_vec(history, num_envs)
+                mac = vec_greedy_mac(venv) if self.mac_scheme == "greedy" \
+                    else vec_random_access(venv)
+                actions = agent.act_batch(obs_hist, greedy=False,
+                                          mask=self.action_mask_vec(venv))
+                res = venv.step(mac, actions.astype(int) - 1)
+                done = res["done"]
+                history.append(venv.observation(res["bs_load"]))
+                agent.memory.push_batch(
+                    obs_hist, actions, res["rewards"],
+                    self._obs_hist_vec(history, num_envs),
+                    np.full(num_envs, done))
+                loss = agent.train_step()
+                if loss is not None:
+                    losses.append(loss)
+                agent.decay_epsilon()
+                ep_reward += res["rewards"]
+            mean_loss = float(np.mean(losses)) if losses else np.nan
+            hist["reward"].extend(ep_reward.tolist())
+            hist["loss"].extend([mean_loss] * num_envs)
+            hist["delivered"].extend(venv.total_delivered.tolist())
+            if log_every and (rd + 1) % log_every == 0:
+                recent = np.mean(hist["reward"][-num_envs * log_every:])
+                print(f"  round {rd + 1:5d} ({len(hist['reward'])} eps)  "
+                      f"reward(avg)={recent:8.3f}  eps={agent.epsilon:.3f}")
+        return {k: v[:episodes] for k, v in hist.items()}
 
     def evaluate(self, episodes: int, *, seed0: int = 9_000) -> Dict[str, float]:
         stats = [self.run_episode(train=False, seed=seed0 + ep)

@@ -24,6 +24,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
+
 NEG_INF = -1e30
 
 
@@ -113,7 +115,7 @@ def sharded_decode_attention(q, k_cache, v_cache, lengths, *,
     cache_spec = P(bspec, axis, None, None)
     out_specs = (P(bspec, None, None), cache_spec, cache_spec) if with_insert \
         else P(bspec, None, None)
-    return jax.shard_map(
+    return shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(bspec, None, None), cache_spec, cache_spec, P(bspec),

@@ -9,8 +9,8 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 import jax
-from jax.sharding import AxisType
 
+from repro.compat import AxisType, make_mesh  # noqa: F401  (compat policy)
 from repro.configs.base import MULTI_POD, SINGLE_POD, MeshConfig
 
 
@@ -19,13 +19,12 @@ def make_production_mesh(*, multi_pod: bool = False):
     "model") across two pods — 256 chips per pod, 512 total."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def make_mesh_from_config(cfg: MeshConfig):
-    return jax.make_mesh(cfg.shape, cfg.axes,
-                         axis_types=(AxisType.Auto,) * len(cfg.axes))
+    return make_mesh(cfg.shape, cfg.axes,
+                     axis_types=(AxisType.Auto,) * len(cfg.axes))
 
 
 def make_host_mesh(shape: Tuple[int, ...] = (1,),
@@ -35,7 +34,7 @@ def make_host_mesh(shape: Tuple[int, ...] = (1,),
     for s in shape:
         n *= s
     assert n <= len(jax.devices()), (shape, len(jax.devices()))
-    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
 def mesh_config(mesh) -> MeshConfig:

@@ -24,6 +24,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig
 
 
@@ -120,7 +121,7 @@ def moe_apply_sharded(params, x, *, cfg: ModelConfig, mesh, model_axis="model",
         y = jnp.zeros((t_l, d), x_l.dtype).at[tok_s].add(contrib)
         return y.reshape(bl, sl, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map(
         local_fn,
         mesh=mesh,
         in_specs=(P(bspec, model_axis, None),      # x: sequence-split (SP)

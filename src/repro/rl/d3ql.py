@@ -72,12 +72,31 @@ class D3QLAgent:
         Action 0 is the null action; action n+1 places on BS n.
         ``mask``: (U, A) bool — False entries are disallowed.
         """
+        mask_b = None if mask is None else mask[None]
+        return self.act_batch(obs_hist[None], greedy=greedy, mask=mask_b)[0]
+
+    def act_batch(self, obs_hist: np.ndarray, *, greedy: bool = False,
+                  mask: Optional[np.ndarray] = None) -> np.ndarray:
+        """Batched acting: obs_hist (E, H, obs_dim) -> actions (E, U).
+
+        One jitted forward serves all E envs; epsilon-greedy exploration is
+        decided per env (each env independently explores with prob epsilon,
+        mirroring the scalar per-call draw), and ``mask`` is (E, U, A).
+        """
         cfg = self.cfg
-        explore = (not greedy) and (self.rng.random() < self.epsilon)
-        if explore:
-            q = self.rng.random((cfg.num_ues, cfg.num_actions)).astype(np.float32)
+        e = obs_hist.shape[0]
+        explore = np.zeros(e, dtype=bool) if greedy \
+            else self.rng.random(e) < self.epsilon
+        q_rand = None
+        if explore.any():
+            q_rand = self.rng.random(
+                (e, cfg.num_ues, cfg.num_actions)).astype(np.float32)
+        if explore.all():
+            q = q_rand                     # skip the forward entirely
         else:
-            q = np.asarray(self._qvals(self.params, obs_hist[None])[0])
+            q = np.asarray(self._qvals(self.params, obs_hist))    # (E, U, A)
+            if q_rand is not None:
+                q = np.where(explore[:, None, None], q_rand, q)
         if mask is not None:
             q = np.where(mask, q, -np.inf)
         return q.argmax(axis=-1).astype(np.int32)
@@ -113,7 +132,6 @@ class D3QLAgent:
             td = y - q_tot
             return jnp.mean(td ** 2)
 
-        @jax.jit
         def update(params, target_params, opt_state, batch):
             loss, grads = jax.value_and_grad(loss_fn)(params, target_params, batch)
             grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
@@ -121,14 +139,20 @@ class D3QLAgent:
             params = apply_updates(params, updates)
             return params, opt_state, loss, gnorm
 
-        return update
+        # buffer donation: params/opt_state update in place on device (no
+        # fresh allocation per train step).  Backends without donation
+        # support (CPU) would warn every call, so gate on the backend.
+        if jax.default_backend() in ("gpu", "tpu"):
+            return jax.jit(update, donate_argnums=(0, 2))
+        return jax.jit(update)
 
     def train_step(self) -> Optional[float]:
         cfg = self.cfg
         if len(self.memory) < cfg.batch_size:
             return None
+        # numpy arrays transfer once inside the jitted call — no extra
+        # host-side jnp.asarray staging pass
         batch = self.memory.sample(cfg.batch_size)
-        batch = {k: jnp.asarray(v) for k, v in batch.items()}
         self.params, self.opt_state, loss, _ = self._update(
             self.params, self.target_params, self.opt_state, batch)
         self.steps += 1

@@ -29,6 +29,22 @@ class ReplayMemory:
         self.idx = (i + 1) % self.capacity
         self.size = min(self.size + 1, self.capacity)
 
+    def push_batch(self, obs, actions, rewards, next_obs, dones) -> None:
+        """Vectorized insert of E transitions (leading axis E) in one write.
+
+        Ring semantics match E sequential ``push`` calls: slots wrap modulo
+        capacity, newest overwrites oldest.
+        """
+        e = len(rewards)
+        ids = (self.idx + np.arange(e)) % self.capacity
+        self.obs[ids] = obs
+        self.actions[ids] = actions
+        self.rewards[ids] = rewards
+        self.next_obs[ids] = next_obs
+        self.dones[ids] = np.asarray(dones, np.float32)
+        self.idx = int((self.idx + e) % self.capacity)
+        self.size = min(self.size + e, self.capacity)
+
     def sample(self, batch: int) -> Dict[str, np.ndarray]:
         ids = self.rng.integers(0, self.size, size=batch)
         return {

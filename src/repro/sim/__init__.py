@@ -1,3 +1,4 @@
 from repro.sim.env import IDLE, PENDING, EdgeSimulator, SimConfig  # noqa: F401
-from repro.sim.mobility import RandomWaypoint  # noqa: F401
+from repro.sim.mobility import RandomWaypoint, VecRandomWaypoint  # noqa: F401
 from repro.sim.quality import from_gdm_model, synthetic_curves  # noqa: F401
+from repro.sim.vec_env import VecEdgeSimulator  # noqa: F401

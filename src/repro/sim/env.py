@@ -26,6 +26,33 @@ IDLE = -1          # chain not running
 PENDING = 0        # prompt uploaded, first block may start next frame (C6)
 
 
+def draw_static_world(cfg: "SimConfig", rng: np.random.Generator,
+                      quality: Optional[np.ndarray] = None) -> Dict[str, np.ndarray]:
+    """Sample one environment's static world (Table II draws).
+
+    The draw ORDER is part of the spec: the vectorized engine replays it
+    per-env with per-env generators to stay bit-identical with the scalar
+    simulator under the same seed.
+    """
+    n, u, s, b = cfg.num_bs, cfg.num_ues, cfg.num_services, cfg.max_blocks
+    w_hat = rng.integers(cfg.capacity_low, cfg.capacity_high + 1, size=n)
+    eps = rng.uniform(cfg.eps_low, cfg.eps_high, size=n)
+    qbar = rng.uniform(cfg.qbar_low, cfg.qbar_high, size=u)
+    service_of = rng.integers(0, s, size=u)                    # Lambda matrix
+    omega = quality if quality is not None else synthetic_curves(s, b, rng)
+    return {"w_hat": w_hat, "eps": eps, "qbar": qbar,
+            "service_of": service_of, "omega": omega}
+
+
+def grid_trans_cost(cfg: "SimConfig") -> np.ndarray:
+    """Y_hat: grid Manhattan distance * unit cost; 0 on the diagonal.
+    Deterministic in cfg — shared by every env instance."""
+    n = cfg.num_bs
+    gx, gy = np.divmod(np.arange(n), cfg.grid)
+    return (np.abs(gx[:, None] - gx[None, :])
+            + np.abs(gy[:, None] - gy[None, :])) * cfg.trans_cost_unit
+
+
 @dataclasses.dataclass(frozen=True)
 class SimConfig:
     grid: int = 4                      # 4x4 service areas (Table II)
@@ -61,19 +88,14 @@ class EdgeSimulator:
         self.cfg = cfg
         rng = np.random.default_rng(cfg.seed)
         self.rng = rng
-        n, u, s, b = cfg.num_bs, cfg.num_ues, cfg.num_services, cfg.max_blocks
-
         # static world (drawn once per instance, as in Table II)
-        self.w_hat = rng.integers(cfg.capacity_low, cfg.capacity_high + 1, size=n)
-        self.eps = rng.uniform(cfg.eps_low, cfg.eps_high, size=n)
-        self.qbar = rng.uniform(cfg.qbar_low, cfg.qbar_high, size=u)
-        self.service_of = rng.integers(0, s, size=u)          # Lambda matrix
-        self.omega = quality if quality is not None else \
-            synthetic_curves(s, b, rng)                        # (S, B+1)
-        # Y_hat: grid Manhattan distance * unit cost; 0 on the diagonal
-        gx, gy = np.divmod(np.arange(n), cfg.grid)
-        self.y_hat = (np.abs(gx[:, None] - gx[None, :])
-                      + np.abs(gy[:, None] - gy[None, :])) * cfg.trans_cost_unit
+        world = draw_static_world(cfg, rng, quality)
+        self.w_hat = world["w_hat"]
+        self.eps = world["eps"]
+        self.qbar = world["qbar"]
+        self.service_of = world["service_of"]
+        self.omega = world["omega"]                            # (S, B+1)
+        self.y_hat = grid_trans_cost(cfg)
 
         self.mobility: Optional[RandomWaypoint] = None
         self.reset()

@@ -1,0 +1,32 @@
+"""Optional-hypothesis shim: property tests skip cleanly when hypothesis is
+absent (see requirements-dev.txt) instead of hard-failing collection, and the
+rest of the module still runs.
+
+Usage::
+
+    from _hypothesis_compat import given, settings, strategies as st
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on the installed env
+    HAVE_HYPOTHESIS = False
+    import pytest
+
+    class _Anything:
+        """Stand-in for ``hypothesis.strategies`` — draws never happen
+        because the ``given`` stub marks the test skipped."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    strategies = _Anything()
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed "
+                                       "(pip install -r requirements-dev.txt)")

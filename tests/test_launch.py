@@ -42,7 +42,7 @@ SUBPROC = textwrap.dedent("""
     import sys
     sys.path.insert(0, "src")
     import jax, jax.numpy as jnp, json
-    from jax.sharding import AxisType
+    from repro.launch.mesh import AxisType, make_mesh
     from repro.configs import get_config, TrainConfig, ShapeConfig
     from repro.launch.steps import (StepOptions, abstract_params,
                                     abstract_opt_state, input_specs,
@@ -54,8 +54,8 @@ SUBPROC = textwrap.dedent("""
     from repro.distributed import analyze, model_flops_estimate
     from jax.sharding import NamedSharding, PartitionSpec as P
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
     cfg = get_config("yi-6b").reduced()
     shape = ShapeConfig("tiny_train", "train", 32, 8)
     params_shape = abstract_params(cfg, dtype=jnp.float32)

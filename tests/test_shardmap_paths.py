@@ -5,12 +5,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from jax.sharding import AxisType
 
 from repro.configs import ModelConfig
 from repro import nn
 from repro.distributed.flash_decode import sharded_decode_attention
 from repro.kernels import ref
+from repro.launch.mesh import AxisType, make_mesh
 from repro.nn.moe_sharded import moe_apply_sharded
 
 MESH = None
@@ -19,8 +19,8 @@ MESH = None
 def mesh():
     global MESH
     if MESH is None:
-        MESH = jax.make_mesh((1, 1), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        MESH = make_mesh((1, 1), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
     return MESH
 
 

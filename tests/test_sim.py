@@ -2,7 +2,8 @@
 mobility, quality curves — including hypothesis property tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import (
     GreedyController,
