@@ -18,12 +18,17 @@ from repro.core import LearnGDMController
 from repro.sim import EdgeSimulator, SimConfig
 
 
-def run(episodes: int = 0, seed: int = 0, num_envs: int = 0) -> dict:
+def run(episodes: int = 0, seed: int = 0, num_envs: int = 0,
+        engine: str = "") -> dict:
     episodes = episodes or scaled(240, lo=40)
     # REPRO_BENCH_NUM_ENVS=1 reproduces the paper's scalar single-env
     # regime (one gradient step per episode frame); default 8 trains
-    # through the vectorized engine (one step per frame across 8 envs)
+    # through the vectorized engine (one step per frame across 8 envs).
+    # REPRO_BENCH_ENGINE=fused trains through the jax-native fused rollout
+    # (train_fused: device-resident env + in-scan D3QL updates) instead of
+    # the numpy vectorized engine — same Fig. 3 criteria apply to both.
     num_envs = num_envs or int(os.environ.get("REPRO_BENCH_NUM_ENVS", "8"))
+    engine = engine or os.environ.get("REPRO_BENCH_ENGINE", "vectorized")
     cfg = SimConfig(num_ues=15, num_channels=2, horizon=40, seed=seed)
     ctrl = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm", seed=seed)
     # scale epsilon decay so exploration anneals over THIS horizon, matching
@@ -32,7 +37,9 @@ def run(episodes: int = 0, seed: int = 0, num_envs: int = 0) -> dict:
     ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(1e-2) / max(frames, 1)))
 
     t0 = time.time()
-    if num_envs > 1:
+    if engine == "fused":
+        hist = ctrl.train_fused(episodes, num_envs=num_envs)
+    elif num_envs > 1:
         hist = ctrl.train_vectorized(episodes, num_envs=num_envs)
     else:
         hist = ctrl.train(episodes)

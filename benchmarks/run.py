@@ -1,6 +1,9 @@
 """Benchmark harness — one entry per paper table/figure + system benches.
 
-Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit).
+Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit) and,
+for every bench whose ``run()`` returns a summary dict, writes it as
+machine-readable ``BENCH_<name>.json`` next to the CSVs (REPRO_BENCH_OUT,
+default ``results/bench``) — the perf trajectory reads those.
 Scale with REPRO_BENCH_SCALE (1.0 default ~ minutes; 25 ~ paper scale).
 
   python -m benchmarks.run                # everything
@@ -8,8 +11,12 @@ Scale with REPRO_BENCH_SCALE (1.0 default ~ minutes; 25 ~ paper scale).
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import traceback
+
+from benchmarks.common import RESULTS_DIR
 
 
 BENCHES = {
@@ -32,7 +39,13 @@ def main() -> None:
         mod_name, desc = BENCHES[name]
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            mod.run()
+            result = mod.run()
+            if isinstance(result, dict):
+                os.makedirs(RESULTS_DIR, exist_ok=True)
+                path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+                with open(path, "w") as f:
+                    json.dump({"bench": name, "result": result}, f,
+                              indent=2, default=float)
         except Exception as e:                                # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR {type(e).__name__}: {e}")

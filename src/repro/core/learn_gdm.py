@@ -21,12 +21,16 @@ import dataclasses
 from collections import deque
 from typing import Dict, List, Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.constraints import TraceRecorder
 from repro.core.mac import (greedy_mac, random_access, vec_greedy_mac,
                             vec_random_access)
-from repro.rl.d3ql import D3QLAgent, D3QLConfig
+from repro.rl.d3ql import D3QLAgent, D3QLConfig, fused_act
+from repro.rl.replay import DeviceReplay
+from repro.sim import jax_env
 from repro.sim.env import IDLE, EdgeSimulator, SimConfig
 from repro.sim.vec_env import VecEdgeSimulator
 
@@ -168,9 +172,10 @@ class LearnGDMController:
     # -- vectorized training ---------------------------------------------------
 
     def train_frames(self, episodes: int, *, num_envs: int = 1) -> int:
-        """Frames (= epsilon-decay / train steps) a :meth:`train` (E=1) or
-        :meth:`train_vectorized` run will execute — callers calibrating the
-        epsilon schedule should use this instead of re-deriving round math."""
+        """Frames (= epsilon-decay / train steps) a :meth:`train` (E=1),
+        :meth:`train_vectorized` or :meth:`train_fused` run will execute —
+        callers calibrating the epsilon schedule should use this instead of
+        re-deriving round math."""
         rounds = -(-episodes // max(num_envs, 1)) if num_envs > 1 else episodes
         return rounds * self.env.cfg.horizon
 
@@ -235,6 +240,172 @@ class LearnGDMController:
                 recent = np.mean(hist["reward"][-num_envs * log_every:])
                 print(f"  round {rd + 1:5d} ({len(hist['reward'])} eps)  "
                       f"reward(avg)={recent:8.3f}  eps={agent.epsilon:.3f}")
+        return {k: v[:episodes] for k, v in hist.items()}
+
+    # -- fused (device-resident) training --------------------------------------
+
+    def _build_fused_round(self, world: jax_env.JaxWorld, num_envs: int,
+                           replay: DeviceReplay):
+        """Compile one training *round* — jax reset + a ``lax.scan`` over the
+        whole episode (act → env step → device replay push → D3QL update per
+        frame) — as a single jitted function.  The agent/replay carry crosses
+        rounds on device; the only host sync per round is the tiny stats
+        pull in :meth:`train_fused`."""
+        agent, cfg = self.agent, self.env.cfg
+        acfg = agent.cfg
+        variant, mac_scheme = self.variant, self.mac_scheme
+        h, horizon = acfg.history, cfg.horizon
+        update_fn = agent.update_fn
+
+        def frame_fn(carry, draws):
+            (params, target, opt_state, rstate, state, obs_hist,
+             epsilon, steps) = carry
+
+            if mac_scheme == "greedy":
+                mac = jax_env.greedy_mac(cfg, world, state)
+            else:
+                mac = jax_env.random_access(
+                    cfg, state, attempt_draws=draws["mac_attempt"],
+                    channel_draws=draws["mac_channel"])
+            mask = jax_env.action_mask(cfg, state, variant)
+            actions = fused_act(params, obs_hist, epsilon=epsilon,
+                                mask=mask, num_ues=acfg.num_ues,
+                                num_actions=acfg.num_actions,
+                                explore_draw=draws["explore"],
+                                q_rand=draws["q_rand"])
+            state, info = jax_env.env_step(
+                cfg, world, state, mac, actions - 1,
+                arrival_draws=draws["arrival"],
+                waypoint_draws=draws["waypoint"])
+            next_obs = jax_env.observe(cfg, world, state, info["bs_load"])
+            next_hist = jnp.concatenate(
+                [obs_hist[:, 1:], next_obs[:, None]], axis=1)
+            done = (state.frame >= horizon).astype(jnp.float32)
+            rstate = replay.push(rstate, obs_hist, actions, info["rewards"],
+                                 next_hist, jnp.full((num_envs,), done))
+
+            can_train = rstate.size >= acfg.batch_size
+
+            def do_train(args):
+                p, t, o = args
+                batch = replay.sample_from_uniforms(rstate, draws["sample"])
+                p, o, loss, _ = update_fn(p, t, o, batch)
+                return p, o, loss
+
+            def skip_train(args):
+                p, _, o = args
+                return p, o, jnp.asarray(jnp.nan, jnp.float32)
+
+            params, opt_state, loss = jax.lax.cond(
+                can_train, do_train, skip_train, (params, target, opt_state))
+            steps = steps + can_train.astype(jnp.int32)
+            sync = can_train & (steps % acfg.target_sync == 0)
+            target = jax.tree_util.tree_map(
+                lambda p, t: jnp.where(sync, p, t), params, target)
+            epsilon = jnp.maximum(acfg.epsilon_floor,
+                                  epsilon * acfg.epsilon_decay)
+            return ((params, target, opt_state, rstate, state, next_hist,
+                     epsilon, steps), (info["rewards"], loss))
+
+        def round_fn(carry, round_key):
+            params, target, opt_state, rstate, epsilon, steps = carry
+            keys = jax.random.split(round_key, 8)
+            state = jax_env.reset_env(cfg, world, keys[0])
+            obs0 = jax_env.observe(cfg, world, state)
+            obs_hist = jnp.repeat(obs0[:, None], h, axis=1)   # (E, H, obs)
+            # whole-round randomness in a few batched draws (per-frame
+            # threefry inside the scan is an XLA:CPU hot spot)
+            t, e, u = horizon, num_envs, acfg.num_ues
+            draws = {
+                "explore": jax.random.uniform(keys[1], (t, e)),
+                "q_rand": jax.random.uniform(
+                    keys[2], (t, e, u, acfg.num_actions)),
+                "arrival": jax.random.uniform(keys[3], (t, e, u)),
+                "waypoint": jax.random.uniform(keys[4], (t, e, u, 2),
+                                               jnp.float32, 0.0, cfg.side),
+                "sample": jax.random.uniform(keys[5],
+                                             (t, acfg.batch_size)),
+                "mac_attempt": jax.random.uniform(keys[6], (t, e, u)),
+                "mac_channel": jax.random.uniform(keys[7], (t, e, u)),
+            }
+            (params, target, opt_state, rstate, state, _, epsilon, steps), \
+                (rewards, losses) = jax.lax.scan(
+                    frame_fn,
+                    (params, target, opt_state, rstate, state, obs_hist,
+                     epsilon, steps),
+                    draws)
+            out = (rewards.sum(axis=0), losses, state.total_delivered)
+            return (params, target, opt_state, rstate, epsilon, steps), out
+
+        if jax.default_backend() in ("gpu", "tpu"):
+            return jax.jit(round_fn, donate_argnums=(0,))
+        return jax.jit(round_fn)
+
+    def train_fused(self, episodes: int, *, num_envs: int = 8,
+                    log_every: int = 0, seed: int = 0) -> Dict[str, list]:
+        """Algorithm 1 as ONE device program per round: jax reset + a
+        jit-compiled ``lax.scan`` chunk running act (epsilon-greedy in-scan)
+        → ``jax_env.env_step`` → device-resident replay push → D3QL update
+        every frame, with the agent/replay carry donated across rounds.
+
+        Zero host↔device round-trips inside an episode; the host loop only
+        pulls per-round stats (E floats).  Like :meth:`train_vectorized`,
+        all stacked envs share ``self.env``'s static world; episode
+        randomness is jax-native (``jax.random`` streams), so trajectories
+        are not numpy-matched — cross-engine logic equivalence is pinned
+        separately by ``tests/test_jax_env.py``.  The device replay is
+        internal to this method (``agent.memory`` is not populated); agent
+        params / target / optimizer state / epsilon / steps are written back
+        so :meth:`evaluate` and further training see the fused progress.
+        Returns the same history dict as :meth:`train` (one entry per
+        episode, trimmed to ``episodes``).
+        """
+        agent, cfg = self.agent, self.env.cfg
+        acfg = agent.cfg
+        # one compiled round per (num_envs, traced-in agent config), reused
+        # across train_fused calls (rebuilding the closure would recompile
+        # the whole scan every call).  The config fields are part of the key
+        # because they are baked into the trace — mutating e.g.
+        # agent.cfg.epsilon_decay between calls must not hit a stale round.
+        cache_key = (num_envs, acfg.epsilon_decay, acfg.epsilon_floor,
+                     acfg.target_sync, acfg.batch_size, acfg.memory_capacity,
+                     acfg.history, acfg.num_ues, acfg.num_actions)
+        cache = getattr(self, "_fused_cache", None)
+        if cache is None:
+            cache = self._fused_cache = {}
+        if cache_key not in cache:
+            world = jax_env.world_from_sim(self.env, num_envs)
+            replay = DeviceReplay(acfg.memory_capacity,
+                                  obs_shape=(acfg.history, self.env.obs_dim),
+                                  action_shape=(acfg.num_ues,))
+            cache[cache_key] = (
+                replay, self._build_fused_round(world, num_envs, replay))
+        replay, round_fn = cache[cache_key]
+
+        carry = (agent.params, agent.target_params, agent.opt_state,
+                 replay.init(), jnp.asarray(agent.epsilon, jnp.float32),
+                 jnp.asarray(agent.steps, jnp.int32))
+        base_key = jax.random.PRNGKey(seed)
+        rounds = -(-episodes // num_envs)
+        hist = {"reward": [], "loss": [], "delivered": []}
+        for rd in range(rounds):
+            carry, (ep_reward, losses, delivered) = round_fn(
+                carry, jax.random.fold_in(base_key, rd))
+            losses = np.asarray(losses)
+            valid = losses[~np.isnan(losses)]
+            mean_loss = float(valid.mean()) if len(valid) else np.nan
+            hist["reward"].extend(np.asarray(ep_reward).tolist())
+            hist["loss"].extend([mean_loss] * num_envs)
+            hist["delivered"].extend(np.asarray(delivered).tolist())
+            if log_every and (rd + 1) % log_every == 0:
+                recent = np.mean(hist["reward"][-num_envs * log_every:])
+                print(f"  round {rd + 1:5d} ({len(hist['reward'])} eps)  "
+                      f"reward(avg)={recent:8.3f}  "
+                      f"eps={float(carry[4]):.3f}")
+        (agent.params, agent.target_params, agent.opt_state, _,
+         epsilon, steps) = carry
+        agent.epsilon = float(epsilon)
+        agent.steps = int(steps)
         return {k: v[:episodes] for k, v in hist.items()}
 
     def evaluate(self, episodes: int, *, seed0: int = 9_000) -> Dict[str, float]:

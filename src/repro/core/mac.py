@@ -25,7 +25,7 @@ def greedy_mac(env: EdgeSimulator) -> np.ndarray:
     pr = env._priorities()
     for bs in np.unique(env.poa[need]):
         ues = np.where(need & (env.poa == bs))[0]
-        ues = ues[np.argsort(-pr[ues])]
+        ues = ues[np.argsort(-pr[ues], kind="stable")]
         for c, i in enumerate(ues[:cfg.num_channels]):
             mac[i] = c
     return mac

@@ -22,6 +22,45 @@ from repro.rl.networks import qnet_apply, qnet_init
 from repro.rl.replay import ReplayMemory
 
 
+def masked_argmax(q: np.ndarray, mask: Optional[np.ndarray]) -> np.ndarray:
+    """Mask-then-argmax — the ONLY action-selection path out of the agent,
+    applied to exploration draws and Q-values alike, so disallowed actions
+    can never be emitted regardless of how ``q`` was produced (including the
+    ``explore.all()`` short-circuit that skips the forward pass)."""
+    if mask is not None:
+        q = np.where(mask, q, -np.inf)
+    return q.argmax(axis=-1).astype(np.int32)
+
+
+def fused_act(params, obs_hist, *, epsilon, mask,
+              num_ues: int, num_actions: int, key=None,
+              explore_draw=None, q_rand=None) -> jnp.ndarray:
+    """In-scan epsilon-greedy acting (pure jax; used by ``train_fused``).
+
+    obs_hist: (E, H, obs_dim); mask: (E, U, A) bool or None; epsilon may be
+    a traced scalar.  Per-env exploration (each env independently explores
+    with prob epsilon) mirrors ``D3QLAgent.act_batch``, and the mask is
+    applied after the explore/greedy merge — same invariant as
+    :func:`masked_argmax` on the numpy path.
+
+    Randomness comes either from ``key`` or from pre-drawn ``explore_draw``
+    ((E,) uniforms) + ``q_rand`` ((E, U, A) uniforms) — the fused loop
+    batch-draws whole scan chunks up front (per-frame threefry inside a
+    scan is an XLA:CPU hot spot).
+    """
+    e = obs_hist.shape[0]
+    q = qnet_apply(params, obs_hist, num_ues=num_ues, num_actions=num_actions)
+    if explore_draw is None:
+        k_explore, k_rand = jax.random.split(key)
+        explore_draw = jax.random.uniform(k_explore, (e,))
+        q_rand = jax.random.uniform(k_rand, q.shape, q.dtype)
+    explore = explore_draw < epsilon
+    q = jnp.where(explore[:, None, None], q_rand.astype(q.dtype), q)
+    if mask is not None:
+        q = jnp.where(mask, q, -jnp.inf)
+    return jnp.argmax(q, axis=-1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class D3QLConfig:
     obs_dim: int = 64
@@ -97,9 +136,7 @@ class D3QLAgent:
             q = np.asarray(self._qvals(self.params, obs_hist))    # (E, U, A)
             if q_rand is not None:
                 q = np.where(explore[:, None, None], q_rand, q)
-        if mask is not None:
-            q = np.where(mask, q, -np.inf)
-        return q.argmax(axis=-1).astype(np.int32)
+        return masked_argmax(q, mask)
 
     def decay_epsilon(self) -> None:
         self.epsilon = max(self.cfg.epsilon_floor,
@@ -138,6 +175,10 @@ class D3QLAgent:
             updates, opt_state = self._opt_update(grads, opt_state, params)
             params = apply_updates(params, updates)
             return params, opt_state, loss, gnorm
+
+        # the un-jitted pure update is reused inside train_fused's scan body
+        # (jitting there would nest jits; the scan is compiled as a whole)
+        self.update_fn = update
 
         # buffer donation: params/opt_state update in place on device (no
         # fresh allocation per train step).  Backends without donation

@@ -1,8 +1,21 @@
-"""Ring-buffer experience memory (capacity 5000, Table II)."""
+"""Ring-buffer experience memory (capacity 5000, Table II).
+
+Two implementations share the ring layout:
+
+* :class:`ReplayMemory` — host/numpy, used by the scalar and vectorized
+  training loops.
+* :class:`DeviceReplay` — device-resident jax twin with *functional*
+  ``push``/``sample`` over a :class:`DeviceReplayState` pytree, safe to call
+  inside ``jit``/``lax.scan`` (used by ``LearnGDMController.train_fused``).
+  Slot layout matches ``ReplayMemory.push_batch`` exactly: pushing the same
+  transition stream yields the same buffer contents slot-for-slot.
+"""
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Tuple
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 
@@ -33,15 +46,19 @@ class ReplayMemory:
         """Vectorized insert of E transitions (leading axis E) in one write.
 
         Ring semantics match E sequential ``push`` calls: slots wrap modulo
-        capacity, newest overwrites oldest.
+        capacity, newest overwrites oldest.  When E exceeds the capacity,
+        only the last ``capacity`` transitions can survive — older ones are
+        dropped *before* writing, so target slots are always unique (fancy
+        assignment with duplicate indices has no defined write order).
         """
         e = len(rewards)
-        ids = (self.idx + np.arange(e)) % self.capacity
-        self.obs[ids] = obs
-        self.actions[ids] = actions
-        self.rewards[ids] = rewards
-        self.next_obs[ids] = next_obs
-        self.dones[ids] = np.asarray(dones, np.float32)
+        start = max(0, e - self.capacity)
+        ids = (self.idx + np.arange(start, e)) % self.capacity
+        self.obs[ids] = np.asarray(obs)[start:]
+        self.actions[ids] = np.asarray(actions)[start:]
+        self.rewards[ids] = np.asarray(rewards)[start:]
+        self.next_obs[ids] = np.asarray(next_obs)[start:]
+        self.dones[ids] = np.asarray(dones, np.float32)[start:]
         self.idx = int((self.idx + e) % self.capacity)
         self.size = min(self.size + e, self.capacity)
 
@@ -57,3 +74,84 @@ class ReplayMemory:
 
     def __len__(self) -> int:
         return self.size
+
+
+class DeviceReplayState(NamedTuple):
+    """Pytree state of a device-resident ring buffer."""
+    obs: jax.Array
+    actions: jax.Array
+    rewards: jax.Array
+    next_obs: jax.Array
+    dones: jax.Array
+    idx: jax.Array      # () int32 — next write slot
+    size: jax.Array     # () int32 — filled slots
+
+
+class DeviceReplay:
+    """Functional device ring buffer: ``state = push(state, batch)``.
+
+    Capacity and array shapes are static (baked at init); ``push`` and
+    ``sample`` are pure jnp and can live inside a jitted ``lax.scan`` body,
+    so the fused rollout writes transitions without ever leaving the device.
+    """
+
+    def __init__(self, capacity: int, obs_shape: Tuple[int, ...],
+                 action_shape: Tuple[int, ...]):
+        self.capacity = capacity
+        self.obs_shape = tuple(obs_shape)
+        self.action_shape = tuple(action_shape)
+
+    def init(self) -> DeviceReplayState:
+        c = self.capacity
+        return DeviceReplayState(
+            obs=jnp.zeros((c, *self.obs_shape), jnp.float32),
+            actions=jnp.zeros((c, *self.action_shape), jnp.int32),
+            rewards=jnp.zeros((c,), jnp.float32),
+            next_obs=jnp.zeros((c, *self.obs_shape), jnp.float32),
+            dones=jnp.zeros((c,), jnp.float32),
+            idx=jnp.asarray(0, jnp.int32),
+            size=jnp.asarray(0, jnp.int32),
+        )
+
+    def push(self, state: DeviceReplayState, obs, actions, rewards,
+             next_obs, dones) -> DeviceReplayState:
+        """Insert E transitions (leading axis E, static).  Slot-for-slot the
+        same layout as ``ReplayMemory.push_batch``: entries older than the
+        last ``capacity`` are dropped pre-write so scatter targets stay
+        unique (XLA scatter order with duplicates is undefined)."""
+        e = rewards.shape[0]
+        start = max(0, e - self.capacity)
+        ids = (state.idx + jnp.arange(start, e)) % self.capacity
+        return DeviceReplayState(
+            obs=state.obs.at[ids].set(obs[start:].astype(jnp.float32)),
+            actions=state.actions.at[ids].set(
+                actions[start:].astype(jnp.int32)),
+            rewards=state.rewards.at[ids].set(
+                rewards[start:].astype(jnp.float32)),
+            next_obs=state.next_obs.at[ids].set(
+                next_obs[start:].astype(jnp.float32)),
+            dones=state.dones.at[ids].set(dones[start:].astype(jnp.float32)),
+            idx=((state.idx + e) % self.capacity).astype(jnp.int32),
+            size=jnp.minimum(state.size + e, self.capacity).astype(jnp.int32),
+        )
+
+    def sample(self, state: DeviceReplayState, key: jax.Array,
+               batch: int) -> Dict[str, jax.Array]:
+        """Uniform sample of ``batch`` transitions (with replacement, like
+        ``ReplayMemory.sample``); callers gate on ``state.size`` themselves
+        (the fused loop trains only once ``size >= batch_size``)."""
+        return self.sample_from_uniforms(
+            state, jax.random.uniform(key, (batch,)))
+
+    def sample_from_uniforms(self, state: DeviceReplayState,
+                             u01: jax.Array) -> Dict[str, jax.Array]:
+        """Sample via pre-drawn uniforms in [0, 1) — lets the fused loop
+        batch-draw a whole scan chunk's sampling randomness up front."""
+        ids = jnp.floor(u01 * jnp.maximum(state.size, 1)).astype(jnp.int32)
+        return {
+            "obs": state.obs[ids],
+            "actions": state.actions[ids],
+            "rewards": state.rewards[ids],
+            "next_obs": state.next_obs[ids],
+            "dones": state.dones[ids],
+        }

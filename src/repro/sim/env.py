@@ -169,7 +169,9 @@ class EdgeSimulator:
         trans_cost = np.zeros(u)
         delivered = np.zeros(u, dtype=bool)
         bs_load = np.zeros(n, dtype=int)
-        order = np.argsort(-(self._priorities()))              # same ordering as MAC
+        # priority-descending, ties stable by UE index (same order as MAC and
+        # as the jax engine, which relies on deterministic tie-breaking)
+        order = np.argsort(-(self._priorities()), kind="stable")
         for i in order:
             a = placement[i]
             k = self.blocks_done[i]

@@ -82,8 +82,13 @@ class VecRandomWaypoint:
             self.dest[e] = rng.uniform(0, side, size=(num_ues, 2))
         self.pause_left = np.zeros((num_envs, num_ues))
 
-    def step(self) -> np.ndarray:
-        """Advance one frame; returns area index per UE, shape (E, U) int."""
+    def step(self, redraw: np.ndarray | None = None) -> np.ndarray:
+        """Advance one frame; returns area index per UE, shape (E, U) int.
+
+        ``redraw``: optional (E, U, 2) uniforms in [0, side) used for the
+        waypoint redraw instead of the per-env generators — the injection
+        hook for the jax-engine equivalence harness.
+        """
         delta = self.dest - self.pos
         dist = np.linalg.norm(delta, axis=-1)                  # (E, U)
         moving = (self.pause_left <= 0)
@@ -98,11 +103,14 @@ class VecRandomWaypoint:
         need_new = (self.pause_left <= 0) & arrived
         expired = (~moving) & (self.pause_left <= 0)
         pick = need_new | expired
-        for e, rng in enumerate(self.rngs):                    # O(E), not O(E*U)
-            n_pick = int(pick[e].sum())
-            if n_pick:
-                self.dest[e][pick[e]] = rng.uniform(0, self.side,
-                                                    size=(n_pick, 2))
+        if redraw is not None:
+            self.dest = np.where(pick[..., None], redraw, self.dest)
+        else:
+            for e, rng in enumerate(self.rngs):                # O(E), not O(E*U)
+                n_pick = int(pick[e].sum())
+                if n_pick:
+                    self.dest[e][pick[e]] = rng.uniform(0, self.side,
+                                                        size=(n_pick, 2))
         return self.area_of(self.pos)
 
     def area_of(self, pos: np.ndarray) -> np.ndarray:

@@ -124,9 +124,10 @@ class VecEdgeSimulator:
 
     def _order_and_rank(self) -> tuple:
         """order[e, j] = UE processed j-th in env e (priority-descending,
-        same argsort kind as the scalar loop, row-wise); rank is its inverse:
-        rank[e, i] = processing position of UE i."""
-        order = np.argsort(-self._priorities(), axis=1)
+        same argsort kind as the scalar loop — stable, ties by UE index —
+        row-wise); rank is its inverse: rank[e, i] = processing position of
+        UE i."""
+        order = np.argsort(-self._priorities(), axis=1, kind="stable")
         rank = np.empty_like(order)
         np.put_along_axis(
             rank, order,
@@ -135,11 +136,20 @@ class VecEdgeSimulator:
 
     # -- one frame -----------------------------------------------------------
 
-    def step(self, mac: np.ndarray, placement: np.ndarray) -> Dict:
+    def step(self, mac: np.ndarray, placement: np.ndarray, *,
+             arrival_draws: Optional[np.ndarray] = None,
+             waypoint_redraw: Optional[np.ndarray] = None) -> Dict:
         """Advance one frame for all E envs.
 
         mac: (E, U) int — channel in [0, C) or -1 (silent).
         placement: (E, U) int — BS in [0, N) or -1 (null action).
+        arrival_draws: optional (E, U) uniforms in [0, 1) replacing the
+            per-env generator draws for new-request arrivals.
+        waypoint_redraw: optional (E, U, 2) uniforms in [0, side) replacing
+            the mobility waypoint redraw draws.  Both hooks exist so the
+            jax engine (``repro.sim.jax_env``) can be driven with *identical*
+            randomness for the logic-equivalence harness; when omitted the
+            native per-env streams are consumed exactly as before.
 
         Returns per-env reward components; ``rewards`` etc. have shape (E,).
         """
@@ -234,8 +244,9 @@ class VecEdgeSimulator:
         # ---- world evolution ----
         self.uploaded = uploaded_now
         self.prev_poa = self.poa.copy()
-        self.poa = self.mobility.step()
-        draws = np.stack([rng.random(u) for rng in self.rngs])
+        self.poa = self.mobility.step(redraw=waypoint_redraw)
+        draws = arrival_draws if arrival_draws is not None \
+            else np.stack([rng.random(u) for rng in self.rngs])
         new_req = (~self.has_request) & (draws < cfg.arrival_prob)
         self.has_request |= new_req
         self.frame += 1

@@ -1,0 +1,190 @@
+"""Fused-rollout plumbing: DeviceReplay ring parity with ReplayMemory,
+push_batch wraparound semantics, full-exploration mask regressions (numpy
+act_batch and the in-scan fused_act), and the train_fused API/learning
+smoke.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import LearnGDMController
+from repro.rl import (D3QLAgent, D3QLConfig, DeviceReplay, ReplayMemory,
+                      fused_act, masked_argmax, qnet_init)
+from repro.sim import EdgeSimulator, SimConfig
+
+
+def _rand_batch(rng, e, obs_shape=(2, 3), act_shape=(2,)):
+    return (rng.standard_normal((e, *obs_shape)).astype(np.float32),
+            rng.integers(0, 5, size=(e, *act_shape)).astype(np.int32),
+            rng.standard_normal(e).astype(np.float32),
+            rng.standard_normal((e, *obs_shape)).astype(np.float32),
+            (rng.random(e) < 0.5))
+
+
+def _assert_same_buffers(mem: ReplayMemory, dstate, msg=""):
+    assert mem.idx == int(dstate.idx) and mem.size == int(dstate.size), msg
+    for name in ("obs", "actions", "rewards", "next_obs", "dones"):
+        assert np.array_equal(getattr(mem, name),
+                              np.asarray(getattr(dstate, name))), \
+            f"{msg}: {name}"
+
+
+# -- push_batch wraparound (numpy) -------------------------------------------
+
+@pytest.mark.parametrize("e", [3, 5, 7, 9, 23])
+def test_push_batch_wraparound_matches_sequential_push(e):
+    """E spanning the ring boundary and E > capacity (capacity 7) must both
+    leave the buffer exactly as E sequential pushes would."""
+    cap = 7
+    rng = np.random.default_rng(e)
+    m_seq = ReplayMemory(cap, obs_shape=(2, 3), action_shape=(2,))
+    m_bat = ReplayMemory(cap, obs_shape=(2, 3), action_shape=(2,))
+    for chunk in range(4):                    # repeated pushes walk the ring
+        obs, act, rew, nxt, dn = _rand_batch(rng, e)
+        for i in range(e):
+            m_seq.push(obs[i], act[i], rew[i], nxt[i], dn[i])
+        m_bat.push_batch(obs, act, rew, nxt, dn)
+        assert m_seq.idx == m_bat.idx and m_seq.size == m_bat.size
+        for name in ("obs", "actions", "rewards", "next_obs", "dones"):
+            assert np.array_equal(getattr(m_seq, name), getattr(m_bat, name)), \
+                f"chunk {chunk} E={e}: {name}"
+
+
+# -- DeviceReplay parity ------------------------------------------------------
+
+@pytest.mark.parametrize("e", [1, 4, 6, 13])
+def test_device_replay_matches_numpy_slot_for_slot(e):
+    cap = 11
+    mem = ReplayMemory(cap, obs_shape=(2, 3), action_shape=(2,))
+    rep = DeviceReplay(cap, obs_shape=(2, 3), action_shape=(2,))
+    state = rep.init()
+    rng = np.random.default_rng(100 + e)
+    for chunk in range(5):
+        obs, act, rew, nxt, dn = _rand_batch(rng, e)
+        mem.push_batch(obs, act, rew, nxt, dn)
+        state = rep.push(state, jnp.asarray(obs), jnp.asarray(act),
+                         jnp.asarray(rew), jnp.asarray(nxt),
+                         jnp.asarray(dn, dtype=jnp.float32))
+        _assert_same_buffers(mem, state, f"chunk {chunk} E={e}")
+
+
+def test_device_replay_push_inside_jit_and_sample():
+    cap, e = 9, 4
+    rep = DeviceReplay(cap, obs_shape=(3,), action_shape=(2,))
+    mem = ReplayMemory(cap, obs_shape=(3,), action_shape=(2,))
+    rng = np.random.default_rng(0)
+    obs, act, rew, nxt, dn = _rand_batch(rng, e, obs_shape=(3,))
+
+    @jax.jit
+    def push3(state):
+        for _ in range(3):                    # 12 pushes through ring of 9
+            state = rep.push(state, jnp.asarray(obs), jnp.asarray(act),
+                             jnp.asarray(rew), jnp.asarray(nxt),
+                             jnp.asarray(dn, dtype=jnp.float32))
+        return state
+
+    state = push3(rep.init())
+    for _ in range(3):
+        mem.push_batch(obs, act, rew, nxt, dn)
+    _assert_same_buffers(mem, state)
+
+    batch = rep.sample(state, jax.random.PRNGKey(0), 16)
+    assert batch["obs"].shape == (16, 3)
+    assert np.all(np.isfinite(np.asarray(batch["rewards"])))
+    # sample_from_uniforms indexes only filled slots
+    u01 = jnp.linspace(0.0, 0.999, 16)
+    ids = np.floor(np.asarray(u01) * int(state.size)).astype(int)
+    got = np.asarray(rep.sample_from_uniforms(state, u01)["rewards"])
+    assert np.array_equal(got, np.asarray(state.rewards)[ids])
+
+
+# -- full-exploration mask regressions ---------------------------------------
+
+def test_act_batch_mask_respected_under_full_exploration():
+    """epsilon = 1.0 forces explore.all(), which skips the Q forward —
+    masked (disallowed) actions must still never be emitted."""
+    cfg = D3QLConfig(obs_dim=4, num_ues=2, num_actions=3, seed=1)
+    agent = D3QLAgent(cfg)
+    agent.epsilon = 1.0
+    obs = np.zeros((4, cfg.history, 4), np.float32)
+    mask = np.ones((4, 2, 3), bool)
+    mask[:, 0, :2] = False               # UE0 may only take action 2
+    mask[:, 1, 1:] = False               # UE1 may only take action 0
+    for _ in range(25):
+        a = agent.act_batch(obs, mask=mask)     # greedy=False by default
+        assert np.all(a[:, 0] == 2) and np.all(a[:, 1] == 0)
+
+
+def test_masked_argmax_is_the_selection_path():
+    q = np.array([[[0.9, 0.1, 0.5]]], np.float32)
+    mask = np.array([[[False, True, True]]])
+    assert masked_argmax(q, mask)[0, 0] == 2
+    assert masked_argmax(q, None)[0, 0] == 0
+
+
+def test_fused_act_mask_respected_under_full_exploration():
+    """The in-scan path: with epsilon = 1.0 every env takes the random-Q
+    branch — the mask must still gate the argmax (jit-compiled, as used
+    inside train_fused's scan)."""
+    u, a, e, h, obs_dim = 2, 3, 4, 2, 6
+    params = qnet_init(jax.random.PRNGKey(0), obs_dim, u, a)
+    obs = jnp.zeros((e, h, obs_dim), jnp.float32)
+    mask = np.ones((e, u, a), bool)
+    mask[:, 0, :2] = False
+    mask = jnp.asarray(mask)
+
+    act = jax.jit(lambda key: fused_act(
+        params, obs, epsilon=1.0, mask=mask, num_ues=u, num_actions=a,
+        key=key))
+    for i in range(20):
+        actions = np.asarray(act(jax.random.PRNGKey(i)))
+        assert np.all(actions[:, 0] == 2), f"draw {i}"
+
+    # pre-drawn variant (the path train_fused actually uses)
+    act2 = jax.jit(lambda ed, qr: fused_act(
+        params, obs, epsilon=1.0, mask=mask, num_ues=u, num_actions=a,
+        explore_draw=ed, q_rand=qr))
+    rng = np.random.default_rng(0)
+    for i in range(20):
+        actions = np.asarray(act2(jnp.asarray(rng.random(e)),
+                                  jnp.asarray(rng.random((e, u, a)))))
+        assert np.all(actions[:, 0] == 2), f"pre-drawn draw {i}"
+
+
+# -- train_fused --------------------------------------------------------------
+
+def test_train_fused_learns_and_matches_api():
+    cfg = SimConfig(num_ues=6, num_channels=2, horizon=10, seed=2)
+    ctrl = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm", seed=0)
+    p0 = np.asarray(jax.tree_util.tree_leaves(ctrl.agent.params)[0]).copy()
+    hist = ctrl.train_fused(6, num_envs=3)
+    assert set(hist) == {"reward", "loss", "delivered"}
+    assert len(hist["reward"]) == 6
+    assert np.all(np.isfinite(hist["reward"]))
+    assert ctrl.agent.epsilon < 1.0
+    assert ctrl.agent.steps > 0
+    # replay filled past batch_size -> updates ran -> params moved
+    assert any(np.isfinite(l) for l in hist["loss"])
+    p1 = np.asarray(jax.tree_util.tree_leaves(ctrl.agent.params)[0])
+    assert not np.allclose(p0, p1)
+    # compiled round is cached across same-config calls...
+    assert len(ctrl._fused_cache) == 1
+    ctrl.train_fused(3, num_envs=3)
+    assert len(ctrl._fused_cache) == 1
+    # ...but config mutations must NOT hit a stale trace: the baked-in
+    # epsilon schedule has to follow agent.cfg (bench_convergence mutates it)
+    ctrl.agent.epsilon = 1.0
+    ctrl.agent.cfg.epsilon_decay = 0.5
+    ctrl.train_fused(3, num_envs=3)
+    assert len(ctrl._fused_cache) == 2
+    assert ctrl.agent.epsilon < 0.01     # 30 frames of 0.5-decay, not 0.99995
+
+
+@pytest.mark.parametrize("variant", ["mp", "fp"])
+def test_train_fused_variants_run(variant):
+    cfg = SimConfig(num_ues=5, num_channels=2, horizon=8, seed=3)
+    ctrl = LearnGDMController(EdgeSimulator(cfg), variant=variant, seed=0)
+    hist = ctrl.train_fused(4, num_envs=2)
+    assert len(hist["reward"]) == 4
+    assert np.all(np.isfinite(hist["reward"]))
