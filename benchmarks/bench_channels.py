@@ -1,41 +1,37 @@
 """Paper Fig. 4B: performance vs number of channels (the communications
-bottleneck).  Qualitative claims: performance degrades as C shrinks; the
-degradation of LEARN-GDM is smaller than the baselines' (resilience via
-variable chain lengths + executing nodes)."""
+bottleneck) — rebuilt on the unified experiment layer (``repro.experiments``;
+fused training + batched evaluation, same knobs as ``bench_users``).
+
+Qualitative claims: performance degrades as C shrinks; the degradation of
+LEARN-GDM is smaller than the baselines' (resilience via variable chain
+lengths + executing nodes).  The swept range extends past the paper's 1..4
+grid."""
 from __future__ import annotations
 
 import time
 
-import numpy as np
-
 from benchmarks.common import emit, save_csv, scaled
-from repro.core import GreedyController, LearnGDMController, opt_upper_bound
-from repro.sim import EdgeSimulator, SimConfig
-from benchmarks.bench_users import _train_variant
+from repro.experiments import qualitative_ordering, run_suite
+from repro.sim.scenarios import get_scenario
+
+COLUMNS = ("learn-gdm", "mp", "fp", "gr", "opt")
 
 
-def run(channel_counts=(1, 2, 3, 4), eval_eps: int = 5) -> dict:
-    train_eps = scaled(120, lo=25)
+def run(channel_counts=(1, 2, 3, 4, 6), eval_eps: int = 5,
+        scenario: str = "paper-fig4b", train_eps: int = 0) -> dict:
+    train_eps = train_eps or scaled(120, lo=24)
     rows = []
     summary = {}
     t0 = time.time()
     for c in channel_counts:
-        cfg = SimConfig(num_ues=15, num_channels=int(c), horizon=40, seed=0)
-        point = {}
-        for variant in ("learn-gdm", "mp", "fp"):
-            ctrl = _train_variant(cfg, variant, train_eps)
-            point[variant] = ctrl.evaluate(eval_eps)["reward"]
-        env = EdgeSimulator(cfg)
-        point["gr"] = GreedyController(env).evaluate(eval_eps)["reward"]
-        point["opt"] = float(np.mean(
-            [opt_upper_bound(env, seed=9_000 + e)["reward"]
-             for e in range(eval_eps)]))
-        rows.append((c, point["learn-gdm"], point["mp"], point["fp"],
-                     point["gr"], point["opt"]))
+        cfg = get_scenario(scenario, num_channels=int(c))
+        point = run_suite(cfg, train_eps=train_eps, eval_eps=eval_eps)
+        point["ordering"] = qualitative_ordering(point)
+        rows.append((c, *(point[k] for k in COLUMNS)))
         summary[c] = point
     wall = time.time() - t0
-    save_csv("fig4b_channels", ["channels", "learn_gdm", "mp", "fp", "gr", "opt"],
-             rows)
+    save_csv("fig4b_channels",
+             ["channels", "learn_gdm", "mp", "fp", "gr", "opt"], rows)
     lg_drop = rows[-1][1] - rows[0][1]
     gr_drop = rows[-1][4] - rows[0][4]
     emit("fig4b_channels", wall * 1e6 / max(len(rows), 1),

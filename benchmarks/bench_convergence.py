@@ -15,11 +15,12 @@ import numpy as np
 
 from benchmarks.common import emit, save_csv, scaled
 from repro.core import LearnGDMController
-from repro.sim import EdgeSimulator, SimConfig
+from repro.sim import EdgeSimulator
+from repro.sim.scenarios import get_scenario
 
 
 def run(episodes: int = 0, seed: int = 0, num_envs: int = 0,
-        engine: str = "") -> dict:
+        engine: str = "", scenario: str = "paper-fig3") -> dict:
     episodes = episodes or scaled(240, lo=40)
     # REPRO_BENCH_NUM_ENVS=1 reproduces the paper's scalar single-env
     # regime (one gradient step per episode frame); default 8 trains
@@ -29,12 +30,13 @@ def run(episodes: int = 0, seed: int = 0, num_envs: int = 0,
     # the numpy vectorized engine — same Fig. 3 criteria apply to both.
     num_envs = num_envs or int(os.environ.get("REPRO_BENCH_NUM_ENVS", "8"))
     engine = engine or os.environ.get("REPRO_BENCH_ENGINE", "vectorized")
-    cfg = SimConfig(num_ues=15, num_channels=2, horizon=40, seed=seed)
+    if engine == "scalar":
+        num_envs = 1            # the scalar regime IS the E=1 reference loop
+    cfg = get_scenario(scenario, seed=seed)
     ctrl = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm", seed=seed)
     # scale epsilon decay so exploration anneals over THIS horizon, matching
     # the paper's schedule proportionally (paper: 0.99995 over 200k frames)
-    frames = ctrl.train_frames(episodes, num_envs=num_envs)
-    ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(1e-2) / max(frames, 1)))
+    ctrl.calibrate_epsilon(episodes, num_envs=num_envs, final=1e-2)
 
     t0 = time.time()
     if engine == "fused":

@@ -1,0 +1,57 @@
+"""Named-scenario sweep: the full method suite on regimes beyond the paper.
+
+Each scenario name resolves through :mod:`repro.sim.scenarios`; every
+regime trains the D3QL variants through the fused engine and evaluates the
+whole comparison set through the batched evaluation path
+(``repro.experiments.run_suite``).  Select regimes with
+``python -m benchmarks.run scenarios --scenario heavy-traffic,large-grid``
+or the ``REPRO_BENCH_SCENARIOS`` env var.
+
+OPT's per-UE DP is O(U * T * B * N^2) in python loops, so the bound is
+skipped on large grids (N > 16) — those points report the learned/GR suite
+only.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+from benchmarks.common import emit, save_csv, scaled
+from repro.experiments import qualitative_ordering, run_suite
+from repro.sim.scenarios import get_scenario, scenario_names
+
+DEFAULT_SCENARIOS = ("heavy-traffic", "channel-starved")
+
+
+def run(scenario: str = "", eval_eps: int = 5, train_eps: int = 0) -> dict:
+    names = [s.strip() for s in
+             (scenario or os.environ.get("REPRO_BENCH_SCENARIOS", "")).split(",")
+             if s.strip()] or list(DEFAULT_SCENARIOS)
+    unknown = [n for n in names if n not in scenario_names()]
+    assert not unknown, f"unknown scenarios {unknown}; known: {scenario_names()}"
+    train_eps = train_eps or scaled(120, lo=24)
+    rows = []
+    summary = {}
+    t0 = time.time()
+    for name in names:
+        cfg = get_scenario(name)
+        point = run_suite(cfg, train_eps=train_eps, eval_eps=eval_eps,
+                          include_opt=cfg.num_bs <= 16)
+        point["ordering"] = qualitative_ordering(point)
+        rows.append((name, cfg.num_ues, cfg.num_channels, cfg.num_bs,
+                     point["learn-gdm"], point["mp"], point["fp"],
+                     point["gr"], point.get("opt", float("nan"))))
+        summary[name] = point
+    wall = time.time() - t0
+    save_csv("scenarios",
+             ["scenario", "num_ues", "channels", "num_bs",
+              "learn_gdm", "mp", "fp", "gr", "opt"], rows)
+    last = rows[-1]
+    emit("scenarios", wall * 1e6 / max(len(rows), 1),
+         f"{last[0]}: learn-gdm={last[4]:.1f} gr={last[7]:.1f} "
+         f"({len(rows)} scenario(s))")
+    return summary
+
+
+if __name__ == "__main__":
+    run()

@@ -2,7 +2,11 @@
 
 ``REPRO_BENCH_SCALE`` (default 1.0) scales episode counts so CI runs in
 minutes while a full run reproduces paper-scale curves (scale 25 ~ the
-paper's 5,000-episode Fig. 3)."""
+paper's 5,000-episode Fig. 3).  Engine selection is shared with the
+experiment layer (``repro.experiments``): ``REPRO_BENCH_ENGINE``
+(scalar | vectorized | fused), ``REPRO_BENCH_NUM_ENVS`` (stacked width),
+``REPRO_BENCH_EVAL_ENGINE`` (evaluation path), and
+``REPRO_BENCH_SCENARIOS`` (default list for the named-scenario sweep)."""
 from __future__ import annotations
 
 import os

@@ -3,14 +3,24 @@
 Prints ``name,us_per_call,derived`` CSV lines (benchmarks/common.emit) and,
 for every bench whose ``run()`` returns a summary dict, writes it as
 machine-readable ``BENCH_<name>.json`` next to the CSVs (REPRO_BENCH_OUT,
-default ``results/bench``) — the perf trajectory reads those.
-Scale with REPRO_BENCH_SCALE (1.0 default ~ minutes; 25 ~ paper scale).
+default ``results/bench``) — the perf trajectory and the CI artifact upload
+read those.  Scale with REPRO_BENCH_SCALE (1.0 default ~ minutes; 25 ~
+paper scale); pick the engine with REPRO_BENCH_ENGINE /
+REPRO_BENCH_NUM_ENVS / REPRO_BENCH_EVAL_ENGINE.
 
-  python -m benchmarks.run                # everything
-  python -m benchmarks.run fig3 kernels   # subset
+  python -m benchmarks.run                          # everything
+  python -m benchmarks.run fig3 kernels             # subset
+  python -m benchmarks.run fig3 --scenario heavy-traffic
+  python -m benchmarks.run scenarios --scenario large-grid,hetero-capacity
+
+``--scenario`` resolves names through the registry in
+``repro.sim.scenarios`` and is forwarded to every selected bench whose
+``run()`` accepts a ``scenario`` argument (fig3/fig4a/fig4b take one name;
+``scenarios`` takes a comma-separated list).
 """
 from __future__ import annotations
 
+import inspect
 import json
 import os
 import sys
@@ -25,21 +35,46 @@ BENCHES = {
                    "rollout frames/sec: scalar vs vectorized engine"),
     "fig4a": ("benchmarks.bench_users", "Fig. 4A quality vs #UEs"),
     "fig4b": ("benchmarks.bench_channels", "Fig. 4B quality vs #channels"),
+    "scenarios": ("benchmarks.bench_scenarios",
+                  "named-scenario suite sweep (repro.sim.scenarios)"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel micro-bench"),
     "serving": ("benchmarks.bench_serving", "serving engine adaptive-vs-fixed"),
     "roofline": ("benchmarks.bench_roofline", "dry-run roofline table readout"),
 }
 
 
+def parse_args(argv):
+    """Split bench names from ``--scenario[= ]NAME[,NAME...]``."""
+    names, scenario = [], ""
+    it = iter(argv)
+    for a in it:
+        if a == "--scenario":
+            scenario = next(it, "")
+            if not scenario or scenario.startswith("-"):
+                raise SystemExit("--scenario requires a name "
+                                 "(see repro.sim.scenarios)")
+        elif a.startswith("--scenario="):
+            scenario = a.split("=", 1)[1]
+        elif a.startswith("-"):
+            raise SystemExit(f"unknown flag {a!r}")
+        else:
+            names.append(a)
+    return names or list(BENCHES), scenario
+
+
 def main() -> None:
-    names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(BENCHES)
+    names, scenario = parse_args(sys.argv[1:])
     print("name,us_per_call,derived")
     failures = 0
     for name in names:
         mod_name, desc = BENCHES[name]
         try:
             mod = __import__(mod_name, fromlist=["run"])
-            result = mod.run()
+            kwargs = {}
+            if scenario and \
+                    "scenario" in inspect.signature(mod.run).parameters:
+                kwargs["scenario"] = scenario
+            result = mod.run(**kwargs)
             if isinstance(result, dict):
                 os.makedirs(RESULTS_DIR, exist_ok=True)
                 path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")

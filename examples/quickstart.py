@@ -7,8 +7,6 @@
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-import numpy as np
-
 from repro.core import GreedyController, LearnGDMController, opt_upper_bound
 from repro.sim import EdgeSimulator, SimConfig
 
@@ -27,7 +25,7 @@ def main():
 
     episodes = 80
     ctrl.agent.epsilon = 1.0
-    ctrl.agent.cfg.epsilon_decay = float(np.exp(np.log(5e-2) / (episodes * cfg.horizon)))
+    ctrl.calibrate_epsilon(episodes, final=5e-2)
     print(f"training D3QL for {episodes} episodes ...")
     ctrl.train(episodes, log_every=20)
 

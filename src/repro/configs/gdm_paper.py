@@ -4,8 +4,24 @@ Stable-Diffusion-class latent denoiser adapted to TPU as a DiT (transformer
 over latent patches + timestep/prompt conditioning).  A "block" in the paper
 (one scheduling quantum, Table II: B=4) is ``steps_per_block`` denoise steps;
 quality Omega(k) is measured by the SSIM proxy in repro/models/gdm.py.
+
+The *system-level* side of the paper — which edge network this service is
+deployed into — is named here too: :data:`SIM_SCENARIO` is the Table II
+regime, and :func:`sim_config` resolves any named scenario from
+:mod:`repro.sim.scenarios` (the registry benchmarks and examples select
+environments from by name).
 """
 from repro.configs.base import ModelConfig
+from repro.sim.scenarios import get_scenario
+
+SIM_SCENARIO = "paper-fig3"       # Table II environment (U=15, C=2, T=40)
+
+
+def sim_config(scenario: str = SIM_SCENARIO, **overrides):
+    """Named edge-network regime for deploying this service
+    (``repro.sim.scenarios`` registry; overrides win over the scenario's
+    defaults)."""
+    return get_scenario(scenario, **overrides)
 
 CONFIG = ModelConfig(
     name="gdm-dit",

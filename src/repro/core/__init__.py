@@ -1,6 +1,12 @@
 """The paper's contribution: LEARN-GDM joint multiple access + placement."""
 from repro.core.baselines import GreedyController, opt_upper_bound  # noqa: F401
 from repro.core.constraints import TraceRecorder, check_all  # noqa: F401
-from repro.core.learn_gdm import EpisodeStats, LearnGDMController, summarize  # noqa: F401
+from repro.core.learn_gdm import (EpisodeStats, LearnGDMController,  # noqa: F401
+                                  summarize, variant_action_mask,
+                                  variant_action_mask_vec)
 from repro.core.mac import (greedy_mac, random_access, vec_greedy_mac,  # noqa: F401
                             vec_random_access)
+from repro.core.policy import (GreedyPoAPolicy, LearnedPolicy, Policy,  # noqa: F401
+                               RandomPolicy, evaluate_batched,
+                               evaluate_fused, evaluate_policy,
+                               rollout_round)

@@ -19,7 +19,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.learn_gdm import EpisodeStats, summarize
+from repro.core.learn_gdm import EpisodeStats
 from repro.core.mac import greedy_mac
 from repro.sim.env import IDLE, EdgeSimulator
 from repro.sim.mobility import RandomWaypoint
@@ -54,9 +54,18 @@ class GreedyController:
             num_delivered=env.num_delivered,
             collisions=env.num_collisions, losses=[])
 
-    def evaluate(self, episodes: int, *, seed0: int = 9_000) -> Dict[str, float]:
-        return summarize([self.run_episode(seed=seed0 + ep)
-                          for ep in range(episodes)])
+    def evaluate(self, episodes: int, *, seed0: int = 9_000,
+                 engine: str = "vectorized",
+                 num_envs: Optional[int] = None,
+                 seed: int = 0) -> Dict[str, float]:
+        """GR through the unified policy/engine seam (same engine knob
+        semantics as ``LearnGDMController.evaluate``; "scalar" keeps the
+        original reference loop)."""
+        from repro.core.policy import GreedyPoAPolicy, evaluate_policy
+        return evaluate_policy(
+            GreedyPoAPolicy(), self.env, episodes, engine=engine,
+            num_envs=num_envs, seed0=seed0, seed=seed,
+            scalar_episode=lambda s: self.run_episode(seed=s))
 
 
 # ---------------------------------------------------------------------------

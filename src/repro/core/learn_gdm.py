@@ -35,6 +35,56 @@ from repro.sim.env import IDLE, EdgeSimulator, SimConfig
 from repro.sim.vec_env import VecEdgeSimulator
 
 
+def variant_action_mask(env: EdgeSimulator, variant: str) -> np.ndarray:
+    """(U, A) bool mask for one scalar env — the variant semantics in one
+    place (see module docstring); shared by the controller and the scalar
+    policy path."""
+    cfg = env.cfg
+    u, a = cfg.num_ues, cfg.num_bs + 1
+    mask = np.ones((u, a), dtype=bool)
+    if variant == "mp":
+        started = env.blocks_done > 0
+        for i in np.where(started)[0]:
+            mask[i, :] = False
+            mask[i, 0] = True                       # null (stop & deliver)
+            mask[i, env.cur_node[i] + 1] = True     # stay on the same node
+    elif variant == "fp":
+        mid_chain = (env.blocks_done > 0) & (env.blocks_done < cfg.max_blocks)
+        mask[mid_chain, 0] = False                  # no early exit
+    return mask
+
+
+def variant_action_mask_vec(venv: VecEdgeSimulator, variant: str) -> np.ndarray:
+    """Batched action masks, (E, U, A) — same semantics as
+    :func:`variant_action_mask` per env, no per-UE loops."""
+    cfg = venv.cfg
+    e, u, a = venv.num_envs, cfg.num_ues, cfg.num_bs + 1
+    mask = np.ones((e, u, a), dtype=bool)
+    if variant == "mp":
+        started = venv.blocks_done.ravel() > 0
+        rows = mask.reshape(e * u, a)
+        rows[started] = False
+        rows[started, 0] = True                     # null (stop & deliver)
+        rows[started, venv.cur_node.ravel()[started] + 1] = True
+    elif variant == "fp":
+        mid_chain = (venv.blocks_done > 0) & \
+            (venv.blocks_done < cfg.max_blocks)
+        mask[..., 0][mid_chain] = False             # no early exit
+    return mask
+
+
+def obs_history_window(history, h: int, pad=None) -> np.ndarray:
+    """Eq. (7) observation window: the last ``h`` frames stacked along a new
+    axis -2, padded by repeating the oldest frame (or ``pad`` when the
+    history is empty).  Works for scalar ((obs,) frames → (H, obs)) and
+    batched ((E, obs) frames → (E, H, obs)) histories alike — the ONE
+    windowing rule shared by the training loops and the evaluation rollouts
+    (the batched-eval-equals-scalar-eval pin depends on it)."""
+    pads = [history[0]] * (h - len(history)) if history else [pad] * h
+    items = list(pads) + list(history)
+    return np.stack(items[-h:], axis=-2)
+
+
 @dataclasses.dataclass
 class EpisodeStats:
     reward: float
@@ -68,46 +118,16 @@ class LearnGDMController:
     # -- action masking ------------------------------------------------------
 
     def action_mask(self) -> np.ndarray:
-        env, cfg = self.env, self.env.cfg
-        u, a = cfg.num_ues, cfg.num_bs + 1
-        mask = np.ones((u, a), dtype=bool)
-        if self.variant == "mp":
-            started = env.blocks_done > 0
-            for i in np.where(started)[0]:
-                mask[i, :] = False
-                mask[i, 0] = True                       # null (stop & deliver)
-                mask[i, env.cur_node[i] + 1] = True     # stay on the same node
-        elif self.variant == "fp":
-            mid_chain = (env.blocks_done > 0) & (env.blocks_done < cfg.max_blocks)
-            mask[mid_chain, 0] = False                  # no early exit
-        return mask
+        return variant_action_mask(self.env, self.variant)
 
     def action_mask_vec(self, venv: VecEdgeSimulator) -> np.ndarray:
-        """Batched action masks, (E, U, A) — same semantics as
-        :meth:`action_mask` per env, no per-UE loops."""
-        cfg = venv.cfg
-        e, u, a = venv.num_envs, cfg.num_ues, cfg.num_bs + 1
-        mask = np.ones((e, u, a), dtype=bool)
-        if self.variant == "mp":
-            started = venv.blocks_done.ravel() > 0
-            rows = mask.reshape(e * u, a)
-            rows[started] = False
-            rows[started, 0] = True                     # null (stop & deliver)
-            rows[started, venv.cur_node.ravel()[started] + 1] = True
-        elif self.variant == "fp":
-            mid_chain = (venv.blocks_done > 0) & \
-                (venv.blocks_done < cfg.max_blocks)
-            mask[..., 0][mid_chain] = False             # no early exit
-        return mask
+        return variant_action_mask_vec(venv, self.variant)
 
     # -- episode loops ---------------------------------------------------------
 
     def _obs_hist(self) -> np.ndarray:
-        h = self.agent.cfg.history
-        pads = [self.history[0]] * (h - len(self.history)) if self.history \
-            else [np.zeros(self.env.obs_dim, np.float32)] * h
-        items = list(pads) + list(self.history)
-        return np.stack(items[-h:], axis=0)
+        return obs_history_window(self.history, self.agent.cfg.history,
+                                  pad=np.zeros(self.env.obs_dim, np.float32))
 
     def run_episode(self, *, train: bool = True, seed: Optional[int] = None,
                     trace: Optional[TraceRecorder] = None) -> EpisodeStats:
@@ -179,12 +199,22 @@ class LearnGDMController:
         rounds = -(-episodes // max(num_envs, 1)) if num_envs > 1 else episodes
         return rounds * self.env.cfg.horizon
 
+    def calibrate_epsilon(self, episodes: int, *, num_envs: int = 1,
+                          final: float = 1e-2) -> float:
+        """Set the agent's multiplicative epsilon schedule so exploration
+        anneals to ``final`` over exactly the frames a run of ``episodes``
+        at ``num_envs`` will execute (:meth:`train_frames`) — the one
+        sanctioned way to scale the paper's 0.99995/200k-frame schedule to
+        a shorter run (callers must not re-derive the round math)."""
+        frames = self.train_frames(episodes, num_envs=num_envs)
+        self.agent.cfg.epsilon_decay = float(
+            np.exp(np.log(final) / max(frames, 1)))
+        return self.agent.cfg.epsilon_decay
+
     def _obs_hist_vec(self, history: deque, num_envs: int) -> np.ndarray:
-        h = self.agent.cfg.history
-        pads = [history[0]] * (h - len(history)) if history \
-            else [np.zeros((num_envs, self.env.obs_dim), np.float32)] * h
-        items = list(pads) + list(history)
-        return np.stack(items[-h:], axis=1)              # (E, H, obs_dim)
+        return obs_history_window(                       # (E, H, obs_dim)
+            history, self.agent.cfg.history,
+            pad=np.zeros((num_envs, self.env.obs_dim), np.float32))
 
     def train_vectorized(self, episodes: int, *, num_envs: int = 8,
                          log_every: int = 0, seed0: int = 1_000,
@@ -408,10 +438,26 @@ class LearnGDMController:
         agent.steps = int(steps)
         return {k: v[:episodes] for k, v in hist.items()}
 
-    def evaluate(self, episodes: int, *, seed0: int = 9_000) -> Dict[str, float]:
-        stats = [self.run_episode(train=False, seed=seed0 + ep)
-                 for ep in range(episodes)]
-        return summarize(stats)
+    def evaluate(self, episodes: int, *, seed0: int = 9_000,
+                 engine: str = "vectorized",
+                 num_envs: Optional[int] = None,
+                 seed: int = 0) -> Dict[str, float]:
+        """Greedy-policy evaluation through the unified policy/engine seam.
+
+        engine: "vectorized" (default — batched numpy rollout; per-episode
+        results are numerically identical to the legacy scalar loop for any
+        ``num_envs``, since each stacked env replays the scalar stream),
+        "fused" (jitted eval scan on the jax engine — jax-native episode
+        randomness, seeded by ``seed``) or "scalar" (the original
+        ``run_episode`` loop, kept as the reference implementation).
+        """
+        # policy imports learn_gdm for EpisodeStats — import at call time
+        from repro.core.policy import LearnedPolicy, evaluate_policy
+        return evaluate_policy(
+            LearnedPolicy(self.agent, self.variant), self.env, episodes,
+            engine=engine, num_envs=num_envs, seed0=seed0, seed=seed,
+            mac_scheme=self.mac_scheme,
+            scalar_episode=lambda s: self.run_episode(train=False, seed=s))
 
 
 def summarize(stats: List[EpisodeStats]) -> Dict[str, float]:

@@ -1,3 +1,4 @@
-from repro.rl.d3ql import D3QLAgent, D3QLConfig, fused_act, masked_argmax  # noqa: F401
+from repro.rl.d3ql import (D3QLAgent, D3QLConfig, fused_act, greedy_act,  # noqa: F401
+                           masked_argmax)
 from repro.rl.networks import qnet_apply, qnet_init  # noqa: F401
 from repro.rl.replay import DeviceReplay, DeviceReplayState, ReplayMemory  # noqa: F401

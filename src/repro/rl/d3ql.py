@@ -61,6 +61,20 @@ def fused_act(params, obs_hist, *, epsilon, mask,
     return jnp.argmax(q, axis=-1).astype(jnp.int32)
 
 
+def greedy_act(params, obs_hist, *, mask, num_ues: int,
+               num_actions: int) -> jnp.ndarray:
+    """Eval-mode acting (pure jax; used inside batched/fused evaluation).
+
+    obs_hist: (E, H, obs_dim); mask: (E, U, A) bool or None.  The greedy
+    twin of :func:`fused_act` — no exploration branch, same mask-after-Q
+    invariant as :func:`masked_argmax` on the numpy path.
+    """
+    q = qnet_apply(params, obs_hist, num_ues=num_ues, num_actions=num_actions)
+    if mask is not None:
+        q = jnp.where(mask, q, -jnp.inf)
+    return jnp.argmax(q, axis=-1).astype(jnp.int32)
+
+
 @dataclasses.dataclass
 class D3QLConfig:
     obs_dim: int = 64

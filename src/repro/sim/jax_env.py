@@ -95,7 +95,10 @@ def world_from_sim(sim, num_envs: Optional[int] = None) -> JaxWorld:
         a = np.asarray(x)
         if not stacked:
             a = np.broadcast_to(a, (num_envs, *a.shape))
-        return jnp.asarray(a, dtype=dtype)
+        # jnp.array (copy) rather than jnp.asarray: the latter may zero-copy
+        # alias the live numpy buffers on CPU (alignment-dependent), and the
+        # source sim mutates its world arrays in place in some tests
+        return jnp.array(a, dtype=dtype)
 
     omega = np.asarray(sim.omega)
     service_of = np.asarray(sim.service_of)
@@ -115,23 +118,31 @@ def world_from_sim(sim, num_envs: Optional[int] = None) -> JaxWorld:
 
 
 def state_from_numpy(venv, key: Optional[jax.Array] = None) -> EnvState:
-    """Import a ``VecEdgeSimulator``'s live state (equivalence harness)."""
+    """Import a ``VecEdgeSimulator``'s live state (equivalence harness).
+
+    Uses ``jnp.array`` (a copy) instead of ``jnp.asarray``: on CPU the
+    latter may zero-copy alias the venv's live numpy buffers
+    (alignment-dependent, so nondeterministic per process), and the venv
+    mutates several of them in place (``num_collisions``, ``has_request``,
+    mobility ``pos``/``dest``/``pause_left``, ...) when it keeps stepping —
+    the imported state must be an immutable snapshot.
+    """
     m = venv.mobility
     return EnvState(
-        pos=jnp.asarray(m.pos), dest=jnp.asarray(m.dest),
-        pause_left=jnp.asarray(m.pause_left),
-        poa=jnp.asarray(venv.poa, jnp.int32),
-        prev_poa=jnp.asarray(venv.prev_poa, jnp.int32),
-        blocks_done=jnp.asarray(venv.blocks_done, jnp.int32),
-        chain_state=jnp.asarray(venv.chain_state, jnp.int32),
-        cur_node=jnp.asarray(venv.cur_node, jnp.int32),
-        has_request=jnp.asarray(venv.has_request, bool),
-        uploaded=jnp.asarray(venv.uploaded, bool),
-        delivered_quality=jnp.asarray(venv.delivered_quality),
-        quality_now=jnp.asarray(venv.quality_now),
-        total_delivered=jnp.asarray(venv.total_delivered),
-        num_delivered=jnp.asarray(venv.num_delivered, jnp.int32),
-        num_collisions=jnp.asarray(venv.num_collisions, jnp.int32),
+        pos=jnp.array(m.pos), dest=jnp.array(m.dest),
+        pause_left=jnp.array(m.pause_left),
+        poa=jnp.array(venv.poa, jnp.int32),
+        prev_poa=jnp.array(venv.prev_poa, jnp.int32),
+        blocks_done=jnp.array(venv.blocks_done, jnp.int32),
+        chain_state=jnp.array(venv.chain_state, jnp.int32),
+        cur_node=jnp.array(venv.cur_node, jnp.int32),
+        has_request=jnp.array(venv.has_request, bool),
+        uploaded=jnp.array(venv.uploaded, bool),
+        delivered_quality=jnp.array(venv.delivered_quality),
+        quality_now=jnp.array(venv.quality_now),
+        total_delivered=jnp.array(venv.total_delivered),
+        num_delivered=jnp.array(venv.num_delivered, jnp.int32),
+        num_collisions=jnp.array(venv.num_collisions, jnp.int32),
         frame=jnp.asarray(venv.frame, jnp.int32),
         key=key if key is not None else jax.random.PRNGKey(0),
     )
@@ -312,8 +323,10 @@ def env_step(cfg: SimConfig, world: JaxWorld, state: EnvState,
     # one collision event per (env, BS, channel) group with >1 senders:
     # count each such group once, at its lowest-index member
     group_rep = want & ~(same_slot & earlier).any(axis=-1)
-    num_collisions = state.num_collisions + \
-        (group_rep & (n_senders > 1)).sum(axis=1)
+    # .astype: bool sums promote to int64 under x64, which would break the
+    # int32 counter carry inside lax.scan
+    num_collisions = state.num_collisions + (group_rep & (n_senders > 1)) \
+        .sum(axis=1).astype(state.num_collisions.dtype)
     chain_state = jnp.where(uploaded_now, PENDING, state.chain_state)
 
     # ---- placement execution (C1-C3): capacity masking by rank ----
@@ -361,7 +374,8 @@ def env_step(cfg: SimConfig, world: JaxWorld, state: EnvState,
     delivered_quality = jnp.where(deliver_q, dq, state.delivered_quality)
     total_delivered = state.total_delivered + \
         jnp.where(deliver_q, dq, 0.0).sum(axis=1)
-    num_delivered = state.num_delivered + deliver_q.sum(axis=1)
+    num_delivered = state.num_delivered + \
+        deliver_q.sum(axis=1).astype(state.num_delivered.dtype)
     blocks_done = jnp.where(delivered, 0, new_blocks)
     chain_state = jnp.where(delivered, IDLE, chain_state)
     cur_node = jnp.where(delivered, -1, new_cur)
@@ -468,3 +482,78 @@ def action_mask(cfg: SimConfig, state: EnvState, variant: str) -> jax.Array:
 def make_step(cfg: SimConfig, world: JaxWorld):
     """Convenience: jitted ``(state, mac, placement) -> (state, info)``."""
     return jax.jit(functools.partial(env_step, cfg, world))
+
+
+# -- batched policy evaluation -------------------------------------------------
+
+def build_eval_round(cfg: SimConfig, act_fn, *,
+                     mac_scheme: str = "greedy", history: int = 1,
+                     needs_obs: bool = True):
+    """Compile one evaluation round — a ``lax.scan`` over the episode running
+    MAC → policy act → :func:`env_step` — as a single jitted function.
+
+    ``act_fn(params, state, obs_hist, draw)`` is the pure policy: given its
+    (pytree) params, the :class:`EnvState`, the (E, H, obs_dim) observation
+    history and an optional per-frame uniform block ``draw`` (``None`` when
+    the draws dict has no ``"policy"`` entry), it returns (E, U) int32
+    actions (0 = null, n+1 = BS n).  This is the seam every controller
+    evaluates through on the fused engine (``repro.core.policy``).
+    ``act_fn`` must not capture device arrays (route world-derived data
+    through ``params``): the world is a traced argument so one compiled
+    round serves every same-shape world.
+
+    Returns jitted ``round_fn(params, world, state0, draws) ->
+    (final_state, stats)`` with ``draws`` a dict of (T, ...) leading-time
+    arrays: ``"arrival"`` (T, E, U), ``"waypoint"`` (T, E, U, 2) and
+    optionally ``"policy"`` plus, for ``mac_scheme="random"``,
+    ``"mac_attempt"`` / ``"mac_channel"`` (T, E, U).  ``state0`` must carry
+    zeroed episode counters (a fresh :func:`reset_env` / post-reset
+    :func:`state_from_numpy` state): per-round stats are read off the final
+    state's counters.  ``needs_obs=False`` (policies whose ``act_fn``
+    ignores observations, e.g. GR) drops the per-frame :func:`observe` and
+    the history carry from the scan.
+    """
+    assert mac_scheme in ("greedy", "random")
+
+    def round_fn(params, world: JaxWorld, state0: EnvState, draws):
+        if needs_obs:
+            obs0 = observe(cfg, world, state0)
+            hist0 = jnp.repeat(obs0[:, None], history, axis=1)  # (E, H, obs)
+        else:
+            hist0 = jnp.zeros((), jnp.float32)                  # inert carry
+
+        def frame_fn(carry, d):
+            state, obs_hist = carry
+            if mac_scheme == "greedy":
+                mac = greedy_mac(cfg, world, state)
+            else:
+                mac = random_access(cfg, state,
+                                    attempt_draws=d["mac_attempt"],
+                                    channel_draws=d["mac_channel"])
+            actions = act_fn(params, state,
+                             obs_hist if needs_obs else None,
+                             d.get("policy"))
+            state, info = env_step(cfg, world, state, mac, actions - 1,
+                                   arrival_draws=d["arrival"],
+                                   waypoint_draws=d["waypoint"])
+            if needs_obs:
+                next_obs = observe(cfg, world, state, info["bs_load"])
+                obs_hist = jnp.concatenate(
+                    [obs_hist[:, 1:], next_obs[:, None]], axis=1)
+            return (state, obs_hist), (info["rewards"], info["quality_gain"],
+                                       info["exec_cost"], info["trans_cost"])
+
+        (state, _), (rew, qg, ec, tc) = jax.lax.scan(
+            frame_fn, (state0, hist0), draws)
+        stats = {
+            "reward": rew.sum(axis=0),
+            "quality_gain": qg.sum(axis=0),
+            "exec_cost": ec.sum(axis=0),
+            "trans_cost": tc.sum(axis=0),
+            "delivered_quality": state.total_delivered,
+            "num_delivered": state.num_delivered,
+            "collisions": state.num_collisions,
+        }
+        return state, stats
+
+    return jax.jit(round_fn)

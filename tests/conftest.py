@@ -3,7 +3,9 @@ CPU device by design; only launch/dryrun.py creates placeholder devices."""
 import os
 import sys
 
-# make `import repro` work regardless of how pytest is invoked
+# make `import repro` (src layout) and `import benchmarks` (repo root)
+# work regardless of how pytest is invoked
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import numpy as np

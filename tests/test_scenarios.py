@@ -1,0 +1,77 @@
+"""Scenario registry: name resolution, override semantics, regime validity,
+and the wiring surfaces (configs/gdm_paper, benchmarks/run CLI)."""
+import numpy as np
+import pytest
+
+from repro.core import GreedyPoAPolicy, evaluate_batched
+from repro.sim import EdgeSimulator
+from repro.sim.scenarios import (get_scenario, scenario_descriptions,
+                                 scenario_names)
+
+PAPER_NEW = ("heavy-traffic", "channel-starved", "large-grid",
+             "hetero-capacity")
+
+
+def test_registry_contains_paper_and_new_regimes():
+    names = scenario_names()
+    for n in ("paper-fig3", "paper-fig4a", "paper-fig4b", *PAPER_NEW):
+        assert n in names
+    descs = scenario_descriptions()
+    assert all(descs[n] for n in names)
+
+
+def test_paper_fig3_matches_table2():
+    cfg = get_scenario("paper-fig3")
+    assert (cfg.num_ues, cfg.num_channels, cfg.horizon) == (15, 2, 40)
+    assert (cfg.grid, cfg.max_blocks, cfg.num_services) == (4, 4, 3)
+
+
+def test_overrides_win_over_scenario_defaults():
+    cfg = get_scenario("heavy-traffic", num_channels=7, seed=42)
+    assert cfg.num_ues == 50                 # scenario default kept
+    assert cfg.num_channels == 7             # override applied
+    assert cfg.seed == 42
+
+
+def test_unknown_scenario_raises_with_known_names():
+    with pytest.raises(KeyError, match="paper-fig3"):
+        get_scenario("no-such-regime")
+
+
+def test_new_regimes_leave_the_paper_grid():
+    paper = get_scenario("paper-fig3")
+    assert get_scenario("heavy-traffic").num_ues > 2 * paper.num_ues
+    assert get_scenario("channel-starved").num_channels < paper.num_channels
+    assert get_scenario("large-grid").num_bs > paper.num_bs
+    het = get_scenario("hetero-capacity")
+    assert (het.capacity_high - het.capacity_low) \
+        > (paper.capacity_high - paper.capacity_low)
+
+
+@pytest.mark.parametrize("name", PAPER_NEW)
+def test_scenario_environments_step(name):
+    """Every registered regime constructs and rolls a GR episode on the
+    batched engine (horizon clipped for test speed)."""
+    cfg = get_scenario(name, horizon=5)
+    out = evaluate_batched(GreedyPoAPolicy(), EdgeSimulator(cfg), 2,
+                           num_envs=2)
+    assert np.isfinite(out["reward"])
+    assert out["num_delivered"] >= 0
+
+
+def test_gdm_paper_config_wires_the_registry():
+    from repro.configs.gdm_paper import SIM_SCENARIO, sim_config
+    assert sim_config() == get_scenario(SIM_SCENARIO)
+    assert sim_config("channel-starved", num_ues=9).num_ues == 9
+
+
+def test_run_py_scenario_flag_parsing():
+    from benchmarks.run import BENCHES, parse_args
+    names, scen = parse_args(["fig3", "--scenario", "heavy-traffic"])
+    assert names == ["fig3"] and scen == "heavy-traffic"
+    names, scen = parse_args(["scenarios", "--scenario=large-grid,smoke"])
+    assert names == ["scenarios"] and scen == "large-grid,smoke"
+    names, scen = parse_args([])
+    assert names == list(BENCHES) and scen == ""
+    with pytest.raises(SystemExit):
+        parse_args(["--bogus"])
