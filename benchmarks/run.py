@@ -38,7 +38,9 @@ BENCHES = {
     "scenarios": ("benchmarks.bench_scenarios",
                   "named-scenario suite sweep (repro.sim.scenarios)"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel micro-bench"),
-    "serving": ("benchmarks.bench_serving", "serving engine adaptive-vs-fixed"),
+    "serving": ("benchmarks.bench_serving",
+                "policy-driven serving on real GDM blocks "
+                "(learned/greedy/random/fixed-chain per scenario)"),
     "roofline": ("benchmarks.bench_roofline", "dry-run roofline table readout"),
 }
 

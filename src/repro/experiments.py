@@ -44,24 +44,36 @@ def bench_num_envs(default: int = 8) -> int:
 def train_variant(cfg: SimConfig, variant: str, episodes: int, *,
                   seed: int = 0, engine: Optional[str] = None,
                   num_envs: Optional[int] = None,
-                  epsilon_final: float = 5e-2) -> LearnGDMController:
+                  epsilon_final: float = 5e-2,
+                  quality: Optional[np.ndarray] = None) -> LearnGDMController:
     """Train one D3QL variant on one environment through the chosen engine.
 
     The epsilon schedule is calibrated via ``train_frames`` for the engine's
     actual frame count (scalar runs one episode per round; batched engines
     run ``num_envs``), replacing the hand-derived frame math the Fig. 4
     benches used to duplicate.
+
+    ``quality``: optional (S, B+1) Ω matrix replacing the synthetic curves —
+    the serving closed loop trains against the curves MEASURED from the real
+    DiT services (``repro.serving.gdm_service``).
     """
     engine = engine or bench_engine()
     num_envs = num_envs or bench_num_envs()
-    ctrl = LearnGDMController(EdgeSimulator(cfg), variant=variant, seed=seed)
+    ctrl = LearnGDMController(EdgeSimulator(cfg, quality=quality),
+                              variant=variant, seed=seed)
     ctrl.calibrate_epsilon(
         episodes, num_envs=1 if engine == "scalar" else num_envs,
         final=epsilon_final)
     if engine == "fused":
         ctrl.train_fused(episodes, num_envs=num_envs)
     elif engine == "vectorized":
-        ctrl.train_vectorized(episodes, num_envs=num_envs)
+        venv = None
+        if quality is not None:
+            from repro.sim.vec_env import VecEdgeSimulator
+            venv = VecEdgeSimulator(cfg, num_envs,
+                                    seeds=np.full(num_envs, cfg.seed),
+                                    quality=quality)
+        ctrl.train_vectorized(episodes, num_envs=num_envs, venv=venv)
     else:
         ctrl.train(episodes)
     return ctrl
@@ -100,6 +112,69 @@ def run_suite(cfg: SimConfig, *, train_eps: int, eval_eps: int,
             [opt_upper_bound(env, seed=9_000 + ep)["reward"]
              for ep in range(eval_eps)]))
     return point
+
+
+def serve_policy(cfg: SimConfig, policy, frames: int, *,
+                 services: Dict[int, object], seed: int = 0,
+                 early_exit: bool = True, record: bool = False,
+                 return_bridge: bool = False):
+    """Deploy one core policy on the serving engine for one scenario trace.
+
+    Builds the engine from the scenario's world
+    (:func:`repro.serving.policy_bridge.engine_from_scenario`), wraps
+    ``policy`` in the :class:`~repro.serving.policy_bridge.ServingPolicy`
+    decision seam, derives the workload via
+    :func:`repro.sim.scenarios.request_trace`, and serves it.  Returns the
+    serving summary (latency/quality/objective); with ``return_bridge`` the
+    bridge (and its recorded trace) comes back too.
+    """
+    from repro.serving.policy_bridge import (ServingPolicy,
+                                             engine_from_scenario,
+                                             serve_trace)
+    from repro.sim.scenarios import request_trace
+
+    engine, world = engine_from_scenario(cfg, services,
+                                         early_exit=early_exit)
+    bridge = ServingPolicy(policy, cfg, world=world, record=record)
+    engine.placement_fn = bridge
+    trace = request_trace(cfg, frames, seed=seed)
+    stats = serve_trace(engine, trace, services, seed=seed)
+    if return_bridge:
+        return stats, bridge
+    return stats
+
+
+def serve_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
+                  train_eps: int, frames: int, seed: int = 0,
+                  engine: Optional[str] = None,
+                  num_envs: Optional[int] = None,
+                  steps_per_block: int = 1,
+                  services: Optional[Dict[int, object]] = None,
+                  early_exit: bool = True) -> Dict[str, float]:
+    """The paper's closed loop: sim-train a placement variant, deploy it on
+    the real-model serving path, serve the scenario's request trace.
+
+    (1) measure Ω(k) from the real DiT services, (2) train the D3QL variant
+    in the simulator AGAINST those measured curves (``train_variant`` with
+    ``quality=Ω``), (3) wrap the trained agent in the ServingPolicy seam and
+    serve ``frames`` quanta of the scenario-derived trace.
+    """
+    from repro.core.policy import LearnedPolicy
+    if services is None:
+        import jax
+        from repro.serving.gdm_service import make_gdm_services
+        services, omega = make_gdm_services(
+            cfg.num_services, jax.random.PRNGKey(seed),
+            num_blocks=cfg.max_blocks, steps_per_block=steps_per_block)
+    else:
+        omega = np.stack([services[s].omega
+                          for s in range(cfg.num_services)])
+    ctrl = train_variant(cfg, variant, train_eps, seed=seed, engine=engine,
+                         num_envs=num_envs, quality=omega)
+    stats = serve_policy(cfg, LearnedPolicy(ctrl.agent, variant), frames,
+                         services=services, seed=seed, early_exit=early_exit)
+    stats["train_episodes"] = train_eps
+    return stats
 
 
 def qualitative_ordering(point: Dict[str, float],

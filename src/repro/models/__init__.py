@@ -4,6 +4,7 @@ from repro.models.gdm import (  # noqa: F401
     init_gdm,
     quality_per_block,
     run_block,
+    run_block_batched,
     sample_chain,
     ssim_proxy,
 )

@@ -115,13 +115,43 @@ def make_schedule(num_steps: int, beta_min: float = 1e-4, beta_max: float = 0.02
 
 def ddim_step(params, latent, step_idx, prompt, cfg: ModelConfig, schedule, *,
               total_steps: int, impl: str = "auto"):
-    """One deterministic DDIM step from t=step_idx to step_idx-1."""
-    t = jnp.full((latent.shape[0],), step_idx, jnp.int32)
+    """One deterministic DDIM step from t=step_idx to step_idx-1.
+
+    ``step_idx`` may be a scalar (whole batch at the same step — the
+    original contract) or a per-sample ``(B,)`` int vector (mixed batch:
+    each latent at its own position in the chain)."""
+    t = jnp.broadcast_to(jnp.asarray(step_idx, jnp.int32), (latent.shape[0],))
     eps = gdm_denoise(params, latent, t, prompt, cfg, impl=impl)
-    ab_t = schedule["alpha_bar"][step_idx]
-    ab_prev = jnp.where(step_idx > 0, schedule["alpha_bar"][jnp.maximum(step_idx - 1, 0)], 1.0)
+    ab = schedule["alpha_bar"]
+    ab_t = ab[t][:, None, None]
+    ab_prev = jnp.where(t > 0, ab[jnp.maximum(t - 1, 0)], 1.0)[:, None, None]
     x0 = (latent - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
     return jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1 - ab_prev) * eps, x0
+
+
+def run_block_batched(params, latent, prompt, cfg: ModelConfig, schedule,
+                      block_idx, *, steps_per_block: int, total_steps: int,
+                      impl: str = "auto"):
+    """Advance each sample of a mixed batch through ITS OWN block.
+
+    ``block_idx``: (B,) int — sample b executes block ``block_idx[b]``
+    (``steps_per_block`` DDIM steps starting at that block's position in the
+    chain).  This is the serving engine's per-(node, quantum) execution unit:
+    all requests scheduled on one node in a quantum stack their latents and
+    run as ONE call, even when they sit at different chain depths.
+    Returns (latent after the block, current x0 estimate), like
+    :func:`run_block`.
+    """
+    start = total_steps - 1 - jnp.asarray(block_idx, jnp.int32) * steps_per_block
+
+    def body(i, carry):
+        lat, _ = carry
+        lat, x0 = ddim_step(params, lat, start - i, prompt, cfg, schedule,
+                            total_steps=total_steps, impl=impl)
+        return lat, x0
+
+    return jax.lax.fori_loop(0, steps_per_block, body,
+                             (latent, jnp.zeros_like(latent)))
 
 
 def run_block(params, latent, prompt, cfg: ModelConfig, schedule, *,
@@ -132,16 +162,10 @@ def run_block(params, latent, prompt, cfg: ModelConfig, schedule, *,
     Blocks count down the chain: block 0 covers steps [T-1 .. T-spb], etc.
     Returns (latent after the block, current x0 estimate).
     """
-    start = total_steps - 1 - block_idx * steps_per_block
-
-    def body(i, carry):
-        lat, _ = carry
-        lat, x0 = ddim_step(params, lat, start - i, prompt, cfg, schedule,
-                            total_steps=total_steps, impl=impl)
-        return lat, x0
-
-    return jax.lax.fori_loop(0, steps_per_block, body,
-                             (latent, jnp.zeros_like(latent)))
+    idx = jnp.full((latent.shape[0],), block_idx, jnp.int32)
+    return run_block_batched(params, latent, prompt, cfg, schedule, idx,
+                             steps_per_block=steps_per_block,
+                             total_steps=total_steps, impl=impl)
 
 
 def sample_chain(params, key, prompt, cfg: ModelConfig, *, num_blocks: int,

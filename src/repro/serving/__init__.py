@@ -5,4 +5,10 @@ from repro.serving.engine import (  # noqa: F401
     Request,
     ServingEngine,
 )
+from repro.serving.gdm_service import GDMService, make_gdm_services  # noqa: F401
 from repro.serving.kv_manager import KVPagePool, PageTable  # noqa: F401
+from repro.serving.policy_bridge import (  # noqa: F401
+    ServingPolicy,
+    engine_from_scenario,
+    serve_trace,
+)

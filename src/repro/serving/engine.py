@@ -16,8 +16,6 @@ reduced models so the end-to-end example actually generates tokens/latents.
 from __future__ import annotations
 
 import dataclasses
-import heapq
-import time
 from collections import deque
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -31,6 +29,11 @@ class Request:
     arrival_frame: int
     quality_threshold: float
     payload: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    # origin (the paper's UE): which UE slot issued the request and which
+    # node (the UE's PoA at arrival) it entered the system at — the decision
+    # seam maps requests back onto the sim's per-UE observation slots
+    ue: int = -1
+    origin: int = 0
     # chain progress
     blocks_done: int = 0
     node: int = -1                   # current executing node
@@ -51,16 +54,22 @@ class NodeSpec:
 
 
 class NodeExecutor:
-    """Executes one chain block of a service on a node.
+    """Executes chain blocks of the services hosted on one node.
 
     ``block_fns[service]``: callable(request_state, block_idx) -> (state,
     quality) — supplied by the model layer (GDM denoise block / LM decode
-    quantum)."""
+    quantum).  ``batch_fns[service]`` (optional): callable(states, block_idxs)
+    -> (states, qualities) advancing a whole stacked batch in ONE call — the
+    engine routes every request scheduled on this node in a quantum through
+    it (one jitted call per (node, service, quantum) instead of a Python
+    loop)."""
 
     def __init__(self, spec: NodeSpec,
-                 block_fns: Dict[int, Callable[[Any, int], Tuple[Any, float]]]):
+                 block_fns: Dict[int, Callable[[Any, int], Tuple[Any, float]]],
+                 batch_fns: Optional[Dict[int, Callable]] = None):
         self.spec = spec
         self.block_fns = block_fns
+        self.batch_fns = batch_fns or {}
 
     def run_block(self, req: Request) -> None:
         state, quality = self.block_fns[req.service](req.state, req.blocks_done)
@@ -68,6 +77,29 @@ class NodeExecutor:
         req.quality = float(quality)
         req.blocks_done += 1
         req.exec_cost += self.spec.exec_cost
+
+    def run_batch(self, reqs: List[Request]) -> None:
+        """Execute one block for every request in ``reqs`` (all scheduled on
+        this node this quantum).  Requests whose service provides a batch
+        entry point are stacked and advanced in one call per service; the
+        rest fall back to per-request :meth:`run_block`."""
+        by_service: Dict[int, List[Request]] = {}
+        for req in reqs:
+            by_service.setdefault(req.service, []).append(req)
+        for service, group in by_service.items():
+            batch_fn = self.batch_fns.get(service)
+            if batch_fn is None or len(group) == 0:
+                for req in group:
+                    self.run_block(req)
+                continue
+            states, qualities = batch_fn(
+                [r.state for r in group],
+                np.asarray([r.blocks_done for r in group], dtype=int))
+            for req, state, quality in zip(group, states, qualities):
+                req.state = state
+                req.quality = float(quality)
+                req.blocks_done += 1
+                req.exec_cost += self.spec.exec_cost
 
 
 @dataclasses.dataclass
@@ -94,6 +126,9 @@ class ServingEngine:
         self.active: List[Request] = []
         self.completed: List[Request] = []
         self.frame = 0
+        # loads of the LAST quantum — the "W_n / W_hat_n" term of the sim
+        # observation (eq. 7 uses the previous frame's loads there too)
+        self.prev_loads = np.zeros(len(nodes), dtype=int)
 
     # -- request lifecycle -----------------------------------------------------
 
@@ -101,23 +136,37 @@ class ServingEngine:
         req.arrival_frame = self.frame
         self.pending.append(req)
 
+    @staticmethod
+    def _priority(req: Request) -> float:
+        """Algorithm 1 line 4: max{1/(Qbar - Q), 1e-8} — matching
+        ``EdgeSimulator._priorities``.  Already-satisfied requests
+        (Q >= Qbar) fall to the floor priority instead of the former
+        1/max(Qbar-Q, 1e-12) -> ~1e12 blow-up that ranked them FIRST and
+        let them keep consuming blocks."""
+        diff = req.quality_threshold - req.quality
+        return 1.0 / diff if diff > 0 else 1e-8
+
     def _admit(self) -> None:
         """Greedy MAC as admission control: threshold-closest first."""
         if not self.pending:
             return
         slots = self.cfg.admission_slots * len(self.nodes)
-        candidates = sorted(
-            self.pending,
-            key=lambda r: -max(1.0 / max(r.quality_threshold - r.quality, 1e-12),
-                               1e-8))
+        candidates = sorted(self.pending, key=self._priority, reverse=True)
+        taken = set()
         for req in candidates[:slots]:
-            self.pending.remove(req)
             req.admitted = True
             self.active.append(req)
+            taken.add(id(req))
+        # one O(n) rebuild preserving arrival order (the former per-request
+        # deque.remove was O(n) per admitted request -> quadratic quanta)
+        self.pending = deque(r for r in self.pending if id(r) not in taken)
 
     def _default_placement(self, req: Request, loads: np.ndarray) -> int:
-        """Capacity-aware locality-greedy placement (non-learned default)."""
-        order = np.argsort(self.y_hat[max(req.node, 0)]
+        """Capacity-aware locality-greedy placement (non-learned default):
+        stay at the current node (or the request's origin node before the
+        first block), spilling to the nearest unsaturated node."""
+        src = req.node if req.node >= 0 else req.origin
+        order = np.argsort(self.y_hat[src]
                            + 10.0 * (loads >= [n.spec.capacity for n in self.nodes]))
         return int(order[0])
 
@@ -125,21 +174,30 @@ class ServingEngine:
 
     def step(self) -> Dict[str, float]:
         self._admit()
+        # policy-driven placement hook: a placement_fn exposing
+        # ``begin_quantum`` (the ServingPolicy bridge) computes one batched
+        # decision for every request slot from the quantum-start state; the
+        # per-request calls below then just read it back
+        begin = getattr(self.placement_fn, "begin_quantum", None)
+        if begin is not None:
+            begin(self)
         loads = np.zeros(len(self.nodes), dtype=int)
         exec_cost = 0.0
         trans_cost = 0.0
         delivered: List[Request] = []
+        assigned: Dict[int, List[Request]] = {}
 
         # threshold-closest priority within the quantum (Algorithm 1 order)
-        order = sorted(
-            self.active,
-            key=lambda r: -max(1.0 / max(r.quality_threshold - r.quality, 1e-12),
-                               1e-8))
+        order = sorted(self.active, key=self._priority, reverse=True)
         for req in order:
             if req.done:
                 continue
             if req.blocks_done >= self.cfg.max_blocks:
                 delivered.append(req)
+                continue
+            if self.cfg.early_exit and req.blocks_done > 0 and \
+                    req.quality >= req.quality_threshold:
+                delivered.append(req)                # satisfied: no more blocks
                 continue
             target = self.placement_fn(req, loads)
             if target < 0:                           # null action: early exit
@@ -151,17 +209,30 @@ class ServingEngine:
                 if req.blocks_done > 0 and self.cfg.early_exit:
                     delivered.append(req)            # deliver what exists
                 continue
-            if req.node >= 0 and req.node != target:
-                cost = float(self.y_hat[req.node, target])
-                req.trans_cost += cost               # latent shipping (C9)
+            # C9 transmission: uplink hop (origin PoA -> first node) for the
+            # first block, latent shipping between nodes afterwards — the
+            # sim's  src = prev_poa if k == 0 else cur_node  rule
+            src = req.node if req.node >= 0 else req.origin
+            if src != target:
+                cost = float(self.y_hat[src, target])
+                req.trans_cost += cost
                 trans_cost += cost
             loads[target] += 1
             req.node = target
-            node.run_block(req)
-            exec_cost += node.spec.exec_cost
-            if req.blocks_done >= self.cfg.max_blocks or (
-                    self.cfg.early_exit and req.quality >= req.quality_threshold):
-                delivered.append(req)
+            assigned.setdefault(target, []).append(req)
+
+        # deferred batched execution: ONE run_batch per (node, quantum) —
+        # placement above never reads intra-quantum block results, so this
+        # is behaviour-identical to the former inline per-request execution
+        for target, reqs in assigned.items():
+            node = self.nodes[target]
+            node.run_batch(reqs)
+            exec_cost += node.spec.exec_cost * len(reqs)
+            for req in reqs:
+                if req.blocks_done >= self.cfg.max_blocks or (
+                        self.cfg.early_exit
+                        and req.quality >= req.quality_threshold):
+                    delivered.append(req)
 
         for req in delivered:
             req.done = True
@@ -169,6 +240,7 @@ class ServingEngine:
             self.active.remove(req)
             self.completed.append(req)
 
+        self.prev_loads = loads
         self.frame += 1
         return {
             "frame": self.frame - 1,
@@ -181,8 +253,9 @@ class ServingEngine:
             if delivered else 0.0,
         }
 
-    def run(self, frames: int) -> Dict[str, float]:
-        stats = [self.step() for _ in range(frames)]
+    def summary(self, frames: int) -> Dict[str, float]:
+        """Aggregate stats over everything completed so far (objective (2):
+        threshold-gated quality minus scaled execution/transmission cost)."""
         lat = [r.delivered_frame - r.arrival_frame + 1 for r in self.completed]
         return {
             "completed": len(self.completed),
@@ -196,3 +269,8 @@ class ServingEngine:
                              for r in self.completed),
             "frames": frames,
         }
+
+    def run(self, frames: int) -> Dict[str, float]:
+        for _ in range(frames):
+            self.step()
+        return self.summary(frames)

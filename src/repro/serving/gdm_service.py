@@ -1,0 +1,117 @@
+"""The real GDM chain behind the serving engine.
+
+One :class:`GDMService` instance is one of the paper's S services: a DiT
+denoiser (``repro.models.gdm``) whose chain the engine executes block by
+block across nodes.  Two contracts back the engine:
+
+* **execution** — ``run_batch(states, block_idxs)`` advances every request
+  scheduled on a node this quantum in ONE jitted
+  :func:`repro.models.gdm.run_block_batched` call over the stacked latents
+  (requests may sit at different chain depths; the batched kernel takes
+  per-sample block indices).  ``batch_calls`` counts those device calls so
+  tests can assert one call per (node, quantum).
+* **quality Ω(k)** — measured from the model itself via
+  :func:`repro.models.gdm.quality_per_block` (SSIM proxy of the block-k x0
+  estimate vs the full-chain output, the paper's Fig. 1 protocol), made
+  monotone by running max.  The same measured curve is what the simulator
+  trains against (``EdgeSimulator(cfg, quality=...)``), closing the
+  sim → serving loop: the placement policy is trained and deployed on ONE
+  quality function.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ModelConfig
+from repro.models.gdm import (LATENT_CHANNELS, init_gdm, make_schedule,
+                              quality_per_block, run_block_batched)
+
+
+class GDMService:
+    """One GDM denoising-chain service (real reduced DiT) for the engine."""
+
+    def __init__(self, key, *, num_blocks: int = 4, steps_per_block: int = 1,
+                 model_cfg: Optional[ModelConfig] = None, prompt_len: int = 8,
+                 ref_prompts: int = 4):
+        self.cfg = model_cfg or get_config("gdm-dit").reduced()
+        self.num_blocks = num_blocks
+        self.steps_per_block = steps_per_block
+        self.prompt_len = prompt_len
+        total = num_blocks * steps_per_block
+        k_init, k_ref = jax.random.split(key)
+        self.params = init_gdm(k_init, self.cfg)
+        self.schedule = make_schedule(total)
+        self.batch_calls = 0                       # device batch-call counter
+
+        cfg, params, schedule = self.cfg, self.params, self.schedule
+        spb = steps_per_block
+
+        @jax.jit
+        def _runner(latent, prompt, block_idx):
+            return run_block_batched(params, latent, prompt, cfg, schedule,
+                                     block_idx, steps_per_block=spb,
+                                     total_steps=total, impl="xla")
+
+        self._runner = _runner
+
+        # Ω(k): measured SSIM-vs-final per block (Fig. 1 protocol), forced
+        # monotone — measured curves are monotone in expectation only
+        prompts = jax.random.randint(k_ref, (ref_prompts, prompt_len), 2,
+                                     self.cfg.vocab_size)
+        q = np.asarray(quality_per_block(params, k_ref, prompts, cfg,
+                                         num_blocks=num_blocks,
+                                         steps_per_block=spb, impl="xla"))
+        self.omega = np.zeros(num_blocks + 1)
+        self.omega[1:] = np.maximum.accumulate(np.clip(q, 0.0, 1.0))
+
+    # -- engine contracts -----------------------------------------------------
+
+    def init_state(self, rng: np.random.Generator) -> Dict:
+        """Fresh request payload: noise latent + prompt token ids."""
+        prompt = np.asarray(rng.integers(2, self.cfg.vocab_size,
+                                         size=(self.prompt_len,)), np.int32)
+        latent = np.asarray(
+            rng.standard_normal((self.cfg.latent_hw ** 2, LATENT_CHANNELS)),
+            np.float32)
+        return {"latent": latent, "prompt": prompt, "x0": None}
+
+    def run_batch(self, states: List[Dict],
+                  block_idxs: np.ndarray) -> Tuple[List[Dict], np.ndarray]:
+        """ONE jitted call for the whole (node, quantum) group."""
+        latent = jnp.stack([jnp.asarray(s["latent"]) for s in states])
+        prompt = jnp.stack([jnp.asarray(s["prompt"]) for s in states])
+        idx = jnp.asarray(block_idxs, jnp.int32)
+        latent, x0 = self._runner(latent, prompt, idx)
+        self.batch_calls += 1
+        out = [dict(s, latent=latent[i], x0=x0[i])
+               for i, s in enumerate(states)]
+        return out, self.omega[np.asarray(block_idxs) + 1]
+
+    def block_fn(self, state: Dict, block_idx: int) -> Tuple[Dict, float]:
+        """Scalar fallback (legacy per-request path): batch of one."""
+        states, qs = self.run_batch([state], np.asarray([block_idx]))
+        return states[0], float(qs[0])
+
+
+def make_gdm_services(num_services: int, key, *, num_blocks: int = 4,
+                      steps_per_block: int = 1,
+                      model_cfg: Optional[ModelConfig] = None,
+                      ) -> Tuple[Dict[int, GDMService], np.ndarray]:
+    """One independent DiT per service + the stacked (S, B+1) Ω matrix.
+
+    The Ω matrix is what the sim trains on (``EdgeSimulator(cfg,
+    quality=omega)``) and what the engine delivers against — the single
+    source of quality truth for the closed loop.
+    """
+    services = {}
+    for s, k in enumerate(jax.random.split(key, num_services)):
+        services[s] = GDMService(k, num_blocks=num_blocks,
+                                 steps_per_block=steps_per_block,
+                                 model_cfg=model_cfg)
+    omega = np.stack([services[s].omega for s in range(num_services)])
+    return services, omega

@@ -17,9 +17,13 @@ where it belongs, in ``SimConfig.seed``.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Callable, Dict, List
 
-from repro.sim.env import SimConfig
+import numpy as np
+
+from repro.sim.env import SimConfig, draw_static_world
+from repro.sim.mobility import RandomWaypoint
 
 _REGISTRY: Dict[str, Callable[[], dict]] = {}
 _DESCRIPTIONS: Dict[str, str] = {}
@@ -51,6 +55,50 @@ def get_scenario(name: str, **overrides) -> SimConfig:
 
 def scenario_names() -> List[str]:
     return sorted(_REGISTRY)
+
+
+# -- serving workloads from scenarios ------------------------------------------
+
+@dataclasses.dataclass
+class RequestTrace:
+    """A serving workload derived from a named scenario: per-frame Bernoulli
+    arrival draws, the RWP PoA stream (request origins), and the world-draw
+    per-UE thresholds / service assignment.  ``arrivals[t, u]`` fires a new
+    request for UE ``u`` at frame ``t`` *iff* that UE is idle — the driver
+    (``repro.serving.policy_bridge.serve_trace``) applies the same idle
+    gating the simulator's arrival process has."""
+    cfg: SimConfig
+    frames: int
+    arrivals: np.ndarray             # (T, U) bool — candidate arrivals
+    poa: np.ndarray                  # (T, U) int  — UE PoA per frame
+    qbar: np.ndarray                 # (U,) quality thresholds (world draw)
+    service_of: np.ndarray           # (U,) service assignment (world draw)
+
+
+def request_trace(cfg: SimConfig, frames: int, seed: int = 0) -> RequestTrace:
+    """Derive a serving arrival trace from a scenario's :class:`SimConfig`.
+
+    Mirrors the simulator's episode semantics: per-UE thresholds and service
+    assignments come from the SAME Table II world draw (``cfg.seed``) the
+    engine/policy world uses; mobility is the paper's RandomWaypoint; frame
+    0 arrivals fire with the env's initial 0.9 request probability, later
+    frames with ``cfg.arrival_prob``.  ``seed`` picks the episode stream
+    (arrivals + mobility) independently of the world.
+    """
+    u = cfg.num_ues
+    world = draw_static_world(cfg, np.random.default_rng(cfg.seed))
+    rng = np.random.default_rng((cfg.seed, seed))
+    rwp = RandomWaypoint(u, grid=cfg.grid, side=cfg.side, speed=cfg.speed,
+                         pause=cfg.pause, rng=rng)
+    poa = np.empty((frames, u), dtype=int)
+    arrivals = np.empty((frames, u), dtype=bool)
+    poa[0] = rwp.area_of(rwp.pos)
+    arrivals[0] = rng.random(u) < 0.9            # env.reset initial requests
+    for t in range(1, frames):
+        poa[t] = rwp.step()
+        arrivals[t] = rng.random(u) < cfg.arrival_prob
+    return RequestTrace(cfg=cfg, frames=frames, arrivals=arrivals, poa=poa,
+                        qbar=world["qbar"], service_of=world["service_of"])
 
 
 def scenario_descriptions() -> Dict[str, str]:

@@ -1,0 +1,189 @@
+"""Cross-layer pinning: the sim↔serving decision seam.
+
+* GreedyPoAPolicy driven through the ServingPolicy adapter reproduces the
+  engine's default (locality-greedy) placement frame-for-frame on a trivial
+  topology (slack capacity, diagonal-minimal Y_hat);
+* LearnedPolicy placements via ``placement_fn`` equal direct
+  ``greedy_act`` on the bridged observations;
+* the real-GDM batched execution path: per-sample block indices match the
+  scalar chain, one jitted call per (node, quantum), measured Ω is monotone.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.learn_gdm import LearnGDMController
+from repro.core.policy import GreedyPoAPolicy, LearnedPolicy, RandomPolicy
+from repro.experiments import serve_policy, serve_variant
+from repro.rl.d3ql import greedy_act
+from repro.serving import (GDMService, NodeExecutor, NodeSpec, Request,
+                           ServingEngine, ServingPolicy, EngineConfig,
+                           engine_from_scenario, serve_trace)
+from repro.sim.env import EdgeSimulator
+from repro.sim.scenarios import get_scenario, request_trace
+
+
+class LinearService:
+    """Synthetic deterministic service (fast stand-in for the DiT)."""
+
+    def __init__(self, per_block=0.22):
+        self.per_block = per_block
+        self.omega = np.minimum(self.per_block * np.arange(5), 1.0)
+
+    def block_fn(self, state, block_idx):
+        states, qs = self.run_batch([state], np.asarray([block_idx]))
+        return states[0], float(qs[0])
+
+    def run_batch(self, states, block_idxs):
+        return ([dict(s or {}) for s in states],
+                np.minimum(self.per_block * (np.asarray(block_idxs) + 1), 1.0))
+
+    def init_state(self, rng):
+        return {}
+
+
+def _services(cfg):
+    return {s: LinearService() for s in range(cfg.num_services)}
+
+
+class RecordingPlacement:
+    """Wrap a placement_fn, logging (frame, rid, target) per decision."""
+
+    def __init__(self, inner, engine):
+        self.inner = inner
+        self.engine = engine
+        self.log = []
+
+    def begin_quantum(self, engine):
+        begin = getattr(self.inner, "begin_quantum", None)
+        if begin is not None:
+            begin(engine)
+
+    def update_poa(self, poa):
+        up = getattr(self.inner, "update_poa", None)
+        if up is not None:
+            up(poa)
+
+    def __call__(self, req, loads):
+        target = self.inner(req, loads)
+        self.log.append((self.engine.frame, req.rid, target))
+        return target
+
+
+# -- greedy-PoA bridge == legacy default placement -----------------------------
+
+def test_greedy_bridge_matches_default_placement_frame_for_frame():
+    # trivial topology: capacity never binds, Y_hat rows are minimized on
+    # the diagonal, UEs do not move (speed 0) -> GR's stay-at-PoA == the
+    # default's stay-at-current-node, frame for frame
+    cfg = get_scenario("smoke", capacity_low=10, capacity_high=10, speed=0.0)
+    frames = 12
+    logs = []
+    summaries = []
+    for use_bridge in (False, True):
+        services = _services(cfg)
+        engine, world = engine_from_scenario(cfg, services)
+        inner = engine._default_placement if not use_bridge else \
+            ServingPolicy(GreedyPoAPolicy(), cfg, world=world)
+        rec = RecordingPlacement(inner, engine)
+        engine.placement_fn = rec
+        trace = request_trace(cfg, frames, seed=3)
+        summaries.append(serve_trace(engine, trace, services, seed=3))
+        logs.append(rec.log)
+    assert logs[0] == logs[1]               # every placement, every frame
+    assert summaries[0] == summaries[1]
+
+
+# -- learned bridge == direct greedy_act on the bridged observations -----------
+
+def test_learned_bridge_matches_direct_greedy_act():
+    cfg = get_scenario("smoke")
+    agent = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm",
+                               seed=0).agent
+    stats, bridge = serve_policy(
+        cfg, LearnedPolicy(agent, "learn-gdm"), 10,
+        services=_services(cfg), seed=1, record=True, return_bridge=True)
+    assert len(bridge.trace) == 10
+    acfg = agent.cfg
+    for _, obs_hist, actions in bridge.trace:
+        direct = np.asarray(greedy_act(
+            agent.params, jnp.asarray(obs_hist), mask=None,
+            num_ues=acfg.num_ues, num_actions=acfg.num_actions))[0]
+        np.testing.assert_array_equal(actions, direct)
+
+
+def test_random_bridge_is_deterministic_per_seed():
+    cfg = get_scenario("smoke")
+    runs = [serve_policy(cfg, RandomPolicy(seed=7), 8,
+                         services=_services(cfg), seed=2) for _ in range(2)]
+    assert runs[0] == runs[1]
+
+
+# -- real GDM blocks behind the engine ----------------------------------------
+
+@pytest.fixture(scope="module")
+def gdm_service():
+    return GDMService(jax.random.PRNGKey(0), num_blocks=2, steps_per_block=1)
+
+
+def test_run_block_batched_matches_scalar_chain(gdm_service):
+    from repro.models.gdm import run_block, run_block_batched
+    svc = gdm_service
+    rng = np.random.default_rng(0)
+    states = [svc.init_state(rng) for _ in range(3)]
+    latent = jnp.stack([jnp.asarray(s["latent"]) for s in states])
+    prompt = jnp.stack([jnp.asarray(s["prompt"]) for s in states])
+    idx = np.array([0, 1, 0])
+    lat_b, x0_b = run_block_batched(
+        svc.params, latent, prompt, svc.cfg, svc.schedule,
+        jnp.asarray(idx), steps_per_block=svc.steps_per_block,
+        total_steps=svc.num_blocks * svc.steps_per_block, impl="xla")
+    for i, k in enumerate(idx):
+        lat_s, x0_s = run_block(
+            svc.params, latent[i:i + 1], prompt[i:i + 1], svc.cfg,
+            svc.schedule, block_idx=int(k),
+            steps_per_block=svc.steps_per_block,
+            total_steps=svc.num_blocks * svc.steps_per_block, impl="xla")
+        np.testing.assert_allclose(lat_b[i], lat_s[0], rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(x0_b[i], x0_s[0], rtol=1e-5, atol=1e-5)
+
+
+def test_gdm_omega_monotone_in_unit_interval(gdm_service):
+    omega = gdm_service.omega
+    assert omega[0] == 0.0
+    assert np.all(np.diff(omega) >= 0)
+    assert np.all((omega >= 0) & (omega <= 1))
+
+
+def test_gdm_engine_one_jitted_call_per_node_quantum(gdm_service):
+    svc = gdm_service
+    node = NodeExecutor(NodeSpec(0, 3, 1.0), {0: svc.block_fn},
+                        {0: svc.run_batch})
+    eng = ServingEngine([node], EngineConfig(max_blocks=2, early_exit=False),
+                        np.zeros((1, 1)))
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, service=0, arrival_frame=0,
+                           quality_threshold=2.0, ue=rid,
+                           state=svc.init_state(rng)))
+    before = svc.batch_calls
+    eng.step()
+    assert svc.batch_calls == before + 1    # 3 requests, ONE device call
+    assert all(r.blocks_done == 1 for r in eng.active)
+    assert all(r.quality == pytest.approx(svc.omega[1]) for r in eng.active)
+
+
+# -- end-to-end closed loop (sim-train -> serve) -------------------------------
+
+@pytest.mark.slow
+def test_serve_variant_closed_loop_smoke():
+    cfg = get_scenario("smoke")
+    stats = serve_variant(cfg, "learn-gdm", train_eps=4, frames=8,
+                          engine="vectorized", num_envs=2)
+    for key in ("completed", "mean_quality", "mean_latency_frames",
+                "p95_latency_frames", "objective", "submitted"):
+        assert key in stats
+    assert stats["completed"] >= 1
+    assert 0.0 <= stats["mean_quality"] <= 1.0

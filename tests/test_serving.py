@@ -84,14 +84,137 @@ def test_admission_priority_threshold_closest_first():
     eng._admit()
     admitted = [r.rid for r in eng.active]
     assert admitted[0] == 1
-    # already-above-threshold requests fall to the floor priority
+    # non-admitted requests keep their arrival order in the pending queue
+    assert [r.rid for r in eng.pending] == [0, 2]
+    # already-above-threshold requests fall to the floor priority: the
+    # below-threshold request wins the single slot even with a far worse gap
     d = _req(3, thr=0.2)
     d.quality = 0.5            # above threshold
     e = _req(4, thr=0.9)
     for r in (d, e):
         eng.submit(r)
     eng._admit()
-    assert eng.active[-2].rid == 4 or eng.active[-1].rid != 3 or True
+    assert eng.active[-1].rid == 2          # closest-below among {0, 2, 3, 4}
+    assert [r.rid for r in eng.pending] == [0, 3, 4]
+
+
+def test_satisfied_request_ranked_last_regression():
+    """Regression for the priority-key bug: quality >= threshold used to map
+    to 1/max(thr - q, 1e-12) ~ 1e12 — infinite priority — so satisfied
+    requests kept consuming blocks ahead of needy ones."""
+    eng = make_engine(n_nodes=1, capacity=1, early_exit=False)
+    satisfied = _req(0, thr=0.2)
+    satisfied.quality = 0.6                 # above threshold, mid-chain
+    satisfied.blocks_done = 2
+    satisfied.node = 0
+    needy = _req(1, thr=0.5)                # below threshold, fresh
+    eng.active.extend([satisfied, needy])
+    eng.step()
+    # the single capacity slot must go to the below-threshold request
+    assert needy.blocks_done == 1
+    assert satisfied.blocks_done == 2
+
+
+def test_satisfied_request_delivered_without_extra_block():
+    """With early exit on, an already-satisfied request is delivered
+    immediately instead of burning another capacity slot."""
+    eng = make_engine(n_nodes=1, capacity=1, early_exit=True)
+    satisfied = _req(0, thr=0.2)
+    satisfied.quality = 0.6
+    satisfied.blocks_done = 2
+    satisfied.node = 0
+    needy = _req(1, thr=0.5)
+    eng.active.extend([satisfied, needy])
+    eng.step()
+    assert satisfied.done and satisfied.blocks_done == 2
+    assert needy.blocks_done == 1           # slot went to the needy request
+
+
+def test_capacity_saturated_no_early_exit_keeps_request_active():
+    eng = make_engine(n_nodes=1, capacity=1, early_exit=False)
+    closer = _req(0, thr=0.95)
+    closer.blocks_done = 2                  # q after 2 blocks = 0.6
+    closer.quality = 0.6
+    closer.node = 0
+    blocked = _req(1, thr=0.95)
+    blocked.blocks_done = 1                 # mid-chain, lower priority
+    blocked.quality = 0.3
+    blocked.node = 0
+    eng.active.extend([closer, blocked])
+    eng.step()
+    # capacity went to the higher-priority request; the blocked mid-chain
+    # request must stay active (not silently dropped or force-delivered)
+    assert closer.blocks_done == 3
+    assert blocked in eng.active and not blocked.done
+    assert blocked.blocks_done == 1
+
+
+def test_null_action_before_any_block_never_delivers():
+    eng = make_engine()
+    eng.placement_fn = lambda req, loads: -1          # always the null action
+    eng.submit(_req(0, thr=0.4))
+    eng.run(5)
+    # a chain with zero executed blocks must NOT deliver an empty result
+    assert eng.completed == []
+    assert len(eng.active) == 1 and eng.active[0].blocks_done == 0
+
+
+class CountingBatchService:
+    """Synthetic batched service: linear quality, counts device calls."""
+
+    def __init__(self, per_block=0.3):
+        self.per_block = per_block
+        self.calls = 0
+
+    def block_fn(self, state, block_idx):
+        states, qs = self.run_batch([state], np.asarray([block_idx]))
+        return states[0], float(qs[0])
+
+    def run_batch(self, states, block_idxs):
+        self.calls += 1
+        return ([dict(s or {}) for s in states],
+                np.minimum(self.per_block * (np.asarray(block_idxs) + 1), 1.0))
+
+    def init_state(self, rng):
+        return {}
+
+
+def test_batched_execution_one_call_per_node_quantum():
+    svc = CountingBatchService()
+    node = NodeExecutor(NodeSpec(0, 3, 1.0), {0: svc.block_fn},
+                        {0: svc.run_batch})
+    eng = ServingEngine([node], EngineConfig(max_blocks=4, early_exit=False),
+                        np.zeros((1, 1)))
+    for rid in range(3):
+        eng.submit(_req(rid, thr=0.95))
+    eng.step()
+    assert svc.calls == 1                   # ONE call for the whole quantum
+    assert all(r.blocks_done == 1 for r in eng.active)
+    eng.step()
+    assert svc.calls == 2
+
+
+def test_batched_execution_mixed_depths_and_migration_cost():
+    """Requests at different chain depths share one batched call and get
+    their own Ω(k); migration + uplink legs are charged on the batch path."""
+    svc = CountingBatchService()
+    nodes = [NodeExecutor(NodeSpec(i, 4, 1.0), {0: svc.block_fn},
+                          {0: svc.run_batch}) for i in range(2)]
+    y = np.abs(np.arange(2)[:, None] - np.arange(2)[None, :]) * 0.2
+    eng = ServingEngine(nodes, EngineConfig(max_blocks=4, early_exit=False), y)
+    eng.placement_fn = lambda req, loads: 1           # everything on node 1
+    fresh = _req(0, thr=0.95)                         # origin node 0
+    mid = _req(1, thr=0.95)
+    mid.blocks_done = 1
+    mid.quality = 0.3
+    mid.node = 0                                      # migrates 0 -> 1
+    eng.active.extend([fresh, mid])
+    eng.step()
+    assert svc.calls == 1
+    assert fresh.blocks_done == 1 and fresh.quality == pytest.approx(0.3)
+    assert mid.blocks_done == 2 and mid.quality == pytest.approx(0.6)
+    assert fresh.trans_cost == pytest.approx(0.2)     # uplink leg 0 -> 1
+    assert mid.trans_cost == pytest.approx(0.2)       # latent hop 0 -> 1
 
 
 # ---------------------------------------------------------------------------
