@@ -41,6 +41,9 @@ BENCHES = {
     "serving": ("benchmarks.bench_serving",
                 "policy-driven serving on real GDM blocks "
                 "(learned/greedy/random/fixed-chain per scenario)"),
+    "cluster": ("benchmarks.bench_cluster",
+                "fleet-scale cluster sweep: cells x workloads x policies "
+                "+ stacked-vs-sequential throughput"),
     "roofline": ("benchmarks.bench_roofline", "dry-run roofline table readout"),
 }
 

@@ -117,30 +117,94 @@ def run_suite(cfg: SimConfig, *, train_eps: int, eval_eps: int,
 def serve_policy(cfg: SimConfig, policy, frames: int, *,
                  services: Dict[int, object], seed: int = 0,
                  early_exit: bool = True, record: bool = False,
-                 return_bridge: bool = False):
+                 return_bridge: bool = False, workload: str = "stationary",
+                 workload_params: Optional[Dict] = None):
     """Deploy one core policy on the serving engine for one scenario trace.
 
     Builds the engine from the scenario's world
     (:func:`repro.serving.policy_bridge.engine_from_scenario`), wraps
     ``policy`` in the :class:`~repro.serving.policy_bridge.ServingPolicy`
     decision seam, derives the workload via
-    :func:`repro.sim.scenarios.request_trace`, and serves it.  Returns the
-    serving summary (latency/quality/objective); with ``return_bridge`` the
-    bridge (and its recorded trace) comes back too.
+    :func:`repro.sim.workloads.workload_trace` (``workload="stationary"``
+    replays the legacy ``request_trace`` exactly), and serves it.  Returns
+    the serving summary (latency/quality/objective); with ``return_bridge``
+    the bridge (and its recorded trace) comes back too.
     """
     from repro.serving.policy_bridge import (ServingPolicy,
                                              engine_from_scenario,
                                              serve_trace)
-    from repro.sim.scenarios import request_trace
+    from repro.sim.workloads import workload_trace
 
     engine, world = engine_from_scenario(cfg, services,
                                          early_exit=early_exit)
     bridge = ServingPolicy(policy, cfg, world=world, record=record)
     engine.placement_fn = bridge
-    trace = request_trace(cfg, frames, seed=seed)
+    trace = workload_trace(cfg, frames, workload, seed=seed,
+                           **(workload_params or {}))
     stats = serve_trace(engine, trace, services, seed=seed)
     if return_bridge:
         return stats, bridge
+    return stats
+
+
+def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
+                       cells: int, services: Dict[int, object],
+                       workload: str = "stationary", seed: int = 0,
+                       handover_rate: float = 0.0, stacked: bool = True,
+                       early_exit: bool = True, telemetry=None,
+                       ledger=None, workload_params: Optional[Dict] = None):
+    """Deploy policies on a C-cell fleet for one scenario × workload.
+
+    ``policy_factory(cell) -> Policy`` builds each cell's placement policy
+    (pass ``None`` for the engine's default locality-greedy placement).
+    Builds the fleet via
+    :func:`repro.serving.cluster.cluster_from_scenario`, derives the
+    per-cell traces + handover schedule via
+    :func:`repro.sim.workloads.fleet_trace`, and serves the whole fleet
+    under one clock.  Returns the fleet summary (per-cell summaries under
+    ``"per_cell"``).
+    """
+    from repro.serving.cluster import cluster_from_scenario, serve_fleet
+    from repro.sim.workloads import fleet_trace
+
+    cluster = cluster_from_scenario(
+        cfg, cells, services, policy_factory=policy_factory,
+        early_exit=early_exit, stacked=stacked, telemetry=telemetry,
+        ledger=ledger)
+    fleet = fleet_trace(cfg, frames, cells, workload=workload, seed=seed,
+                        handover_rate=handover_rate,
+                        **(workload_params or {}))
+    return serve_fleet(cluster, fleet, services, seed=seed)
+
+
+def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
+                        train_eps: int, frames: int, cells: int,
+                        workload: str = "stationary", seed: int = 0,
+                        handover_rate: float = 0.0,
+                        engine: Optional[str] = None,
+                        num_envs: Optional[int] = None,
+                        services: Optional[Dict[int, object]] = None,
+                        workload_params: Optional[Dict] = None):
+    """The closed loop at fleet scale: sim-train ONE placement variant
+    against the measured Ω curves, then deploy it to every cell of a
+    C-cell cluster and serve the fleet workload."""
+    from repro.core.policy import LearnedPolicy
+    if services is None:
+        import jax
+        from repro.serving.gdm_service import make_gdm_services
+        services, omega = make_gdm_services(
+            cfg.num_services, jax.random.PRNGKey(seed),
+            num_blocks=cfg.max_blocks)
+    else:
+        omega = np.stack([services[s].omega
+                          for s in range(cfg.num_services)])
+    ctrl = train_variant(cfg, variant, train_eps, seed=seed, engine=engine,
+                         num_envs=num_envs, quality=omega)
+    stats = serve_fleet_policy(
+        cfg, lambda c: LearnedPolicy(ctrl.agent, variant), frames,
+        cells=cells, services=services, workload=workload, seed=seed,
+        handover_rate=handover_rate, workload_params=workload_params)
+    stats["train_episodes"] = train_eps
     return stats
 
 

@@ -120,8 +120,12 @@ def main(argv=None) -> dict:
 
     for rid in range(args.requests):
         service = int(rng.integers(0, 2))
+        # requests enter scattered across the nodes (their UEs' PoAs):
+        # admission is C slots per entry node (the sim's per-BS MAC), so
+        # funnelling everything through node 0 would serialize the fleet
         req = Request(rid=rid, service=service, arrival_frame=0,
-                      quality_threshold=float(rng.uniform(0.1, 0.5)))
+                      quality_threshold=float(rng.uniform(0.1, 0.5)),
+                      origin=int(rng.integers(0, n)))
         req.state = inits[service](rng)
         engine.submit(req)
 

@@ -1,14 +1,31 @@
+from repro.serving.cluster import (  # noqa: F401
+    ClusterEngine,
+    HandoverEvent,
+    cluster_from_scenario,
+    serve_fleet,
+)
 from repro.serving.engine import (  # noqa: F401
     EngineConfig,
     NodeExecutor,
     NodeSpec,
     Request,
     ServingEngine,
+    apply_block_results,
 )
 from repro.serving.gdm_service import GDMService, make_gdm_services  # noqa: F401
-from repro.serving.kv_manager import KVPagePool, PageTable  # noqa: F401
+from repro.serving.kv_manager import (  # noqa: F401
+    KVPagePool,
+    PageTable,
+    TransferLedger,
+    state_nbytes,
+)
 from repro.serving.policy_bridge import (  # noqa: F401
     ServingPolicy,
     engine_from_scenario,
     serve_trace,
+)
+from repro.serving.telemetry import (  # noqa: F401
+    TELEMETRY_SCHEMA,
+    QuantumEvent,
+    TelemetryLog,
 )

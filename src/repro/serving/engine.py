@@ -21,6 +21,9 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.serving.kv_manager import TransferLedger, state_nbytes
+from repro.serving.telemetry import QuantumEvent, TelemetryLog
+
 
 @dataclasses.dataclass
 class Request:
@@ -44,6 +47,26 @@ class Request:
     trans_cost: float = 0.0
     exec_cost: float = 0.0
     admitted: bool = False
+    # C9 cost decomposition (trans_cost stays the running total): the
+    # uplink hop (PoA -> first node), latent hops between nodes inside a
+    # cell, cross-cell handover (repro.serving.cluster), and the delivery
+    # leg (execution node -> UE PoA)
+    uplink_cost: float = 0.0
+    migration_cost: float = 0.0
+    handover_cost: float = 0.0
+    downlink_cost: float = 0.0
+
+
+def apply_block_results(reqs: List[Request], states: List[Any],
+                        qualities, exec_costs) -> None:
+    """Write one executed block's results back onto ``reqs`` — shared by the
+    per-node batch path (:meth:`NodeExecutor.run_batch`) and the cluster's
+    cross-cell stacked execution, so both paths do identical bookkeeping."""
+    for req, state, quality, cost in zip(reqs, states, qualities, exec_costs):
+        req.state = state
+        req.quality = float(quality)
+        req.blocks_done += 1
+        req.exec_cost += float(cost)
 
 
 @dataclasses.dataclass
@@ -95,11 +118,8 @@ class NodeExecutor:
             states, qualities = batch_fn(
                 [r.state for r in group],
                 np.asarray([r.blocks_done for r in group], dtype=int))
-            for req, state, quality in zip(group, states, qualities):
-                req.state = state
-                req.quality = float(quality)
-                req.blocks_done += 1
-                req.exec_cost += self.spec.exec_cost
+            apply_block_results(group, states, qualities,
+                                [self.spec.exec_cost] * len(group))
 
 
 @dataclasses.dataclass
@@ -109,15 +129,32 @@ class EngineConfig:
     alpha: float = 0.1
     beta: float = 0.1
     early_exit: bool = True          # adaptive chain length
+    charge_downlink: bool = True     # C9 last leg: execution node -> UE PoA
     seed: int = 0
 
 
 class ServingEngine:
-    """Continuous-batching chain scheduler over heterogeneous nodes."""
+    """Continuous-batching chain scheduler over heterogeneous nodes.
+
+    One engine is one *cell* of the fleet: ``cell_id`` tags its telemetry
+    events, an optional :class:`~repro.serving.kv_manager.TransferLedger`
+    records every charged C9 leg, and an optional
+    :class:`~repro.serving.telemetry.TelemetryLog` receives one
+    :class:`~repro.serving.telemetry.QuantumEvent` per quantum.  The
+    scheduling quantum is split into :meth:`begin_step` (admission +
+    placement + transmission charging) and :meth:`end_step` (delivery +
+    accounting) around the block execution, so a
+    :class:`~repro.serving.cluster.ClusterEngine` can stack the execution of
+    many cells into one device call per service; :meth:`step` composes the
+    three for standalone use and is behaviour-identical to the former
+    monolithic quantum.
+    """
 
     def __init__(self, nodes: List[NodeExecutor], cfg: EngineConfig,
                  trans_cost: np.ndarray,
-                 placement_fn: Optional[Callable] = None):
+                 placement_fn: Optional[Callable] = None, *,
+                 cell_id: int = 0, ledger: Optional[TransferLedger] = None,
+                 telemetry: Optional[TelemetryLog] = None):
         self.nodes = nodes
         self.cfg = cfg
         self.y_hat = trans_cost                     # (N, N) node-to-node cost
@@ -129,12 +166,47 @@ class ServingEngine:
         # loads of the LAST quantum — the "W_n / W_hat_n" term of the sim
         # observation (eq. 7 uses the previous frame's loads there too)
         self.prev_loads = np.zeros(len(nodes), dtype=int)
+        self.cell_id = cell_id
+        self.ledger = ledger
+        self.telemetry = telemetry
+        self.ue_poa: Optional[np.ndarray] = None    # UE -> PoA node stream
+        self._last_admitted = 0
+        self._last_dropped = 0
+        self._denied_once: set = set()              # rids counted as dropped
+        # C9 costs charged THIS quantum (reset after the telemetry event);
+        # the cluster adds cross-cell handover charges here too
+        self._legs_quantum = {"uplink": 0.0, "migration": 0.0,
+                              "handover": 0.0, "downlink": 0.0}
+        self._quantum: Optional[tuple] = None       # begin_step scratch
 
     # -- request lifecycle -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
         req.arrival_frame = self.frame
         self.pending.append(req)
+
+    def set_poa(self, poa: np.ndarray) -> None:
+        """Feed the UEs' current PoAs (the trace's mobility stream).  Used
+        for per-node admission (a pending UE competes for its CURRENT cell's
+        uplink slots, like the sim's per-BS MAC) and for the downlink
+        delivery leg; without it both fall back to each request's arrival
+        origin."""
+        self.ue_poa = np.asarray(poa, dtype=int)
+
+    def _entry_node(self, req: Request) -> int:
+        if self.ue_poa is not None and 0 <= req.ue < len(self.ue_poa):
+            return int(self.ue_poa[req.ue])
+        return req.origin
+
+    def _charge(self, req: Request, kind: str, src: int, dst: int,
+                cost: float) -> None:
+        """Charge one C9 transmission leg + record it in the ledger."""
+        req.trans_cost += cost
+        setattr(req, f"{kind}_cost", getattr(req, f"{kind}_cost") + cost)
+        self._legs_quantum[kind] += cost
+        if self.ledger is not None:
+            self.ledger.record(self.frame, req.rid, kind, src, dst,
+                               state_nbytes(req.state), cost)
 
     @staticmethod
     def _priority(req: Request) -> float:
@@ -147,32 +219,57 @@ class ServingEngine:
         return 1.0 / diff if diff > 0 else 1e-8
 
     def _admit(self) -> None:
-        """Greedy MAC as admission control: threshold-closest first."""
+        """Greedy MAC as admission control: threshold-closest first, C slots
+        per NODE — matching the sim's per-BS MAC (each UE competes for the C
+        uplink channels of ITS current cell), not the former top C·N global
+        cut.  A pending request enters at its UE's current PoA
+        (``set_poa`` stream) or, without one, at its arrival origin."""
+        self._last_admitted = 0
+        self._last_dropped = 0
         if not self.pending:
             return
-        slots = self.cfg.admission_slots * len(self.nodes)
+        slots = self.cfg.admission_slots
         candidates = sorted(self.pending, key=self._priority, reverse=True)
         taken = set()
-        for req in candidates[:slots]:
+        node_taken = np.zeros(len(self.nodes), dtype=int)
+        for req in candidates:
+            entry = self._entry_node(req)
+            if node_taken[entry] >= slots:
+                continue
+            node_taken[entry] += 1
             req.admitted = True
             self.active.append(req)
             taken.add(id(req))
+        self._last_admitted = len(taken)
         # one O(n) rebuild preserving arrival order (the former per-request
         # deque.remove was O(n) per admitted request -> quadratic quanta)
         self.pending = deque(r for r in self.pending if id(r) not in taken)
+        # a request counts as an admission drop ONCE (its first denied
+        # quantum) — re-counting the whole backlog every quantum would let
+        # summed telemetry drops exceed total submissions; keyed by rid
+        # (stable across the request's lifetime, unlike id())
+        for r in self.pending:
+            if r.rid not in self._denied_once:
+                self._denied_once.add(r.rid)
+                self._last_dropped += 1
 
     def _default_placement(self, req: Request, loads: np.ndarray) -> int:
         """Capacity-aware locality-greedy placement (non-learned default):
-        stay at the current node (or the request's origin node before the
-        first block), spilling to the nearest unsaturated node."""
-        src = req.node if req.node >= 0 else req.origin
+        stay at the current node (or the UE's current PoA before the first
+        block), spilling to the nearest unsaturated node."""
+        src = req.node if req.node >= 0 else self._entry_node(req)
         order = np.argsort(self.y_hat[src]
                            + 10.0 * (loads >= [n.spec.capacity for n in self.nodes]))
         return int(order[0])
 
     # -- one scheduling quantum (paper time frame) -------------------------------
 
-    def step(self) -> Dict[str, float]:
+    def begin_step(self) -> Dict[int, List[Request]]:
+        """First half of a quantum: admission, batched policy decision,
+        placement, and transmission charging.  Returns the ``node ->
+        requests`` execution plan; the caller (``step`` or the cluster's
+        stacked executor) advances every planned request by one block and
+        then calls :meth:`end_step`."""
         self._admit()
         # policy-driven placement hook: a placement_fn exposing
         # ``begin_quantum`` (the ServingPolicy bridge) computes one batched
@@ -182,7 +279,6 @@ class ServingEngine:
         if begin is not None:
             begin(self)
         loads = np.zeros(len(self.nodes), dtype=int)
-        exec_cost = 0.0
         trans_cost = 0.0
         delivered: List[Request] = []
         assigned: Dict[int, List[Request]] = {}
@@ -209,25 +305,35 @@ class ServingEngine:
                 if req.blocks_done > 0 and self.cfg.early_exit:
                     delivered.append(req)            # deliver what exists
                 continue
-            # C9 transmission: uplink hop (origin PoA -> first node) for the
-            # first block, latent shipping between nodes afterwards — the
-            # sim's  src = prev_poa if k == 0 else cur_node  rule
-            src = req.node if req.node >= 0 else req.origin
+            # C9 transmission: uplink hop (the UE's CURRENT PoA -> first
+            # node) for the first block, latent shipping between nodes
+            # afterwards — the sim's  src = prev_poa if k == 0 else
+            # cur_node  rule.  _entry_node follows the set_poa stream (a UE
+            # that moved while queued uplinks from where it IS), falling
+            # back to the arrival origin without one — consistent with
+            # per-node admission and the downlink leg.
+            src = req.node if req.node >= 0 else self._entry_node(req)
             if src != target:
                 cost = float(self.y_hat[src, target])
-                req.trans_cost += cost
+                self._charge(req, "migration" if req.node >= 0 else "uplink",
+                             src, target, cost)
                 trans_cost += cost
             loads[target] += 1
             req.node = target
             assigned.setdefault(target, []).append(req)
 
-        # deferred batched execution: ONE run_batch per (node, quantum) —
-        # placement above never reads intra-quantum block results, so this
-        # is behaviour-identical to the former inline per-request execution
+        self._quantum = (loads, delivered, trans_cost)
+        return assigned
+
+    def end_step(self, assigned: Dict[int, List[Request]]) -> Dict[str, float]:
+        """Second half of a quantum: post-execution delivery checks, the
+        downlink leg, accounting, and the telemetry event."""
+        assert self._quantum is not None, "end_step without begin_step"
+        loads, delivered, trans_cost = self._quantum
+        self._quantum = None
+        exec_cost = 0.0
         for target, reqs in assigned.items():
-            node = self.nodes[target]
-            node.run_batch(reqs)
-            exec_cost += node.spec.exec_cost * len(reqs)
+            exec_cost += self.nodes[target].spec.exec_cost * len(reqs)
             for req in reqs:
                 if req.blocks_done >= self.cfg.max_blocks or (
                         self.cfg.early_exit
@@ -235,10 +341,35 @@ class ServingEngine:
                     delivered.append(req)
 
         for req in delivered:
+            # C9's last hop, mirroring the sim's delivery rule: the final
+            # latent ships from the execution node to the UE's current PoA
+            if self.cfg.charge_downlink and req.blocks_done > 0 \
+                    and req.node >= 0:
+                dst = self._entry_node(req)
+                cost = float(self.y_hat[req.node, dst])
+                if cost != 0.0 or self.ledger is not None:
+                    self._charge(req, "downlink", req.node, dst, cost)
+                trans_cost += cost
             req.done = True
             req.delivered_frame = self.frame
             self.active.remove(req)
             self.completed.append(req)
+
+        if self.telemetry is not None:
+            # every leg is what was CHARGED this quantum (uplink/migration
+            # at placement, handover by the cluster, downlink at delivery,
+            # compute for the executed blocks) — one consistent per-quantum
+            # decomposition whose totals match the transfer ledger
+            self.telemetry.record(QuantumEvent(
+                frame=self.frame, cell=self.cell_id,
+                queue_depth=len(self.pending), admitted=self._last_admitted,
+                dropped=self._last_dropped, active=len(self.active),
+                delivered=len(delivered),
+                node_load=[int(x) for x in loads],
+                node_capacity=[n.spec.capacity for n in self.nodes],
+                legs={"compute": exec_cost, **self._legs_quantum}))
+        self._last_dropped = 0
+        self._legs_quantum = {k: 0.0 for k in self._legs_quantum}
 
         self.prev_loads = loads
         self.frame += 1
@@ -253,20 +384,41 @@ class ServingEngine:
             if delivered else 0.0,
         }
 
+    def step(self) -> Dict[str, float]:
+        assigned = self.begin_step()
+        # deferred batched execution: ONE run_batch per (node, quantum) —
+        # placement never reads intra-quantum block results, so this is
+        # behaviour-identical to inline per-request execution
+        for target, reqs in assigned.items():
+            self.nodes[target].run_batch(reqs)
+        return self.end_step(assigned)
+
     def summary(self, frames: int) -> Dict[str, float]:
         """Aggregate stats over everything completed so far (objective (2):
         threshold-gated quality minus scaled execution/transmission cost)."""
-        lat = [r.delivered_frame - r.arrival_frame + 1 for r in self.completed]
+        done = self.completed
+        lat = [r.delivered_frame - r.arrival_frame + 1 for r in done]
         return {
-            "completed": len(self.completed),
-            "mean_quality": float(np.mean([r.quality for r in self.completed]))
-            if self.completed else 0.0,
+            "completed": len(done),
+            "mean_quality": float(np.mean([r.quality for r in done]))
+            if done else 0.0,
             "mean_latency_frames": float(np.mean(lat)) if lat else 0.0,
             "p95_latency_frames": float(np.percentile(lat, 95)) if lat else 0.0,
             "objective": sum(r.quality * (r.quality >= r.quality_threshold)
                              - self.cfg.alpha * r.exec_cost
                              - self.cfg.beta * r.trans_cost
-                             for r in self.completed),
+                             for r in done),
+            # mean per-request C9 cost decomposition (telemetry carries the
+            # per-quantum stream; this is the completed-set aggregate)
+            "legs": {
+                leg: float(np.mean([getattr(r, field) for r in done]))
+                if done else 0.0
+                for leg, field in (("uplink", "uplink_cost"),
+                                   ("compute", "exec_cost"),
+                                   ("migration", "migration_cost"),
+                                   ("handover", "handover_cost"),
+                                   ("downlink", "downlink_cost"))
+            },
             "frames": frames,
         }
 

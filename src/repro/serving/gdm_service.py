@@ -82,12 +82,34 @@ class GDMService:
 
     def run_batch(self, states: List[Dict],
                   block_idxs: np.ndarray) -> Tuple[List[Dict], np.ndarray]:
-        """ONE jitted call for the whole (node, quantum) group."""
-        latent = jnp.stack([jnp.asarray(s["latent"]) for s in states])
-        prompt = jnp.stack([jnp.asarray(s["prompt"]) for s in states])
-        idx = jnp.asarray(block_idxs, jnp.int32)
+        """ONE jitted call for the whole (node, quantum) group.
+
+        The batch is padded to the next power of two before the device call:
+        serving batch sizes vary per quantum (and fleet-stacked batches vary
+        more), so without bucketing every new size would trigger an XLA
+        recompile.  The DiT is per-sample independent — padding rows never
+        change the live rows' results; the pad is sliced off before the
+        states are written back.
+        """
+        b = len(states)
+        # pow2 up to 8, then multiples of 8: bounded compile count with at
+        # most 7 wasted rows on the big fleet-stacked batches (pow2 alone
+        # wastes up to ~2x compute there)
+        bucket = (1 << max(b - 1, 0).bit_length()) if b <= 8 \
+            else -(-b // 8) * 8
+        pad = bucket - b
+        # stack on the host (request latents round-trip as numpy rows): one
+        # device transfer per call instead of per-sample device ops
+        latent = np.stack([np.asarray(s["latent"]) for s in states]
+                          + [np.asarray(states[0]["latent"])] * pad)
+        prompt = np.stack([np.asarray(s["prompt"]) for s in states]
+                          + [np.asarray(states[0]["prompt"])] * pad)
+        idx = np.concatenate([np.asarray(block_idxs, np.int32),
+                              np.zeros(pad, np.int32)])
         latent, x0 = self._runner(latent, prompt, idx)
         self.batch_calls += 1
+        latent = np.asarray(latent)
+        x0 = np.asarray(x0)
         out = [dict(s, latent=latent[i], x0=x0[i])
                for i, s in enumerate(states)]
         return out, self.omega[np.asarray(block_idxs) + 1]

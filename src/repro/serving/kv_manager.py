@@ -1,12 +1,22 @@
-"""Paged KV-cache manager for the LM-decode services.
+"""KV/latent transfer accounting + paged KV-cache manager.
 
-Pages of ``page_size`` positions are allocated from a fixed pool per node;
-a request's logical cache maps to a page table.  This keeps chain *migration*
-(the paper's latent hop between nodes) cheap to reason about: moving a chain
-ships only its live pages (C9 bytes = pages * page_bytes), and the free-list
-makes admission decisions capacity-aware.
+Two pieces back the C9 transmission legs of the serving layer:
 
-The manager tracks logical state; the physical arrays live in the node's
+* :func:`state_nbytes` / :class:`TransferLedger` — the migration
+  *accounting* seam.  Every byte that moves a request's live state between
+  nodes (latent hops inside a cell) or between cells (fleet handover,
+  ``repro.serving.cluster``) is recorded here as a typed transfer event, so
+  telemetry and benchmarks can decompose latency/cost into
+  uplink / migration / handover / downlink without re-deriving it from
+  engine internals.  ``ServingEngine`` records through an optional ledger;
+  the cluster charges cross-cell handovers through the same interface.
+* :class:`KVPagePool` — paged physical state for the LM-decode services.
+  Pages of ``page_size`` positions are allocated from a fixed pool per
+  node; a request's logical cache maps to a page table.  Moving a chain
+  ships only its live pages (C9 bytes = pages * page_bytes), and the
+  free-list makes admission decisions capacity-aware.
+
+The pool tracks logical state; the physical arrays live in the node's
 device memory and are indexed by page id (the reduced CPU executor simply
 keeps them in a numpy pool).
 """
@@ -16,6 +26,75 @@ import dataclasses
 from typing import Dict, List, Optional
 
 import numpy as np
+
+TRANSFER_KINDS = ("uplink", "migration", "handover", "downlink")
+
+
+def state_nbytes(state) -> int:
+    """C9 payload size of a request's live state, in bytes.
+
+    Sums every array-valued leaf of the payload (dict values, nested dicts,
+    lists of arrays); non-array leaves are free.  A paged LM request whose
+    payload carries a pool handle reports its live pages instead (via a
+    ``migration_nbytes`` key or method).
+    """
+    if state is None:
+        return 0
+    custom = getattr(state, "migration_nbytes", None)
+    if custom is not None:                       # paged/pooled payloads
+        return int(custom() if callable(custom) else custom)
+    nbytes = getattr(state, "nbytes", None)
+    if nbytes is not None:
+        return int(nbytes)
+    if isinstance(state, dict):
+        if "migration_nbytes" in state:
+            custom = state["migration_nbytes"]
+            return int(custom() if callable(custom) else custom)
+        return sum(state_nbytes(v) for v in state.values())
+    if isinstance(state, (list, tuple)):
+        return sum(state_nbytes(v) for v in state)
+    return 0
+
+
+@dataclasses.dataclass
+class TransferEvent:
+    frame: int
+    rid: int
+    kind: str                        # one of TRANSFER_KINDS
+    src: int                         # node id (or cell id for handover)
+    dst: int
+    nbytes: int
+    cost: float
+
+
+class TransferLedger:
+    """Typed record of every state transfer the serving layer charges.
+
+    The engine appends one event per charged C9 leg; ``totals()`` gives the
+    per-kind byte/cost aggregate the telemetry layer and ``bench_cluster``
+    report.  Keeping this in ``kv_manager`` puts all migration byte-math in
+    one place, next to the page pool whose ``migration_bytes`` feeds it for
+    paged LM services.
+    """
+
+    def __init__(self):
+        self.events: List[TransferEvent] = []
+
+    def record(self, frame: int, rid: int, kind: str, src: int, dst: int,
+               nbytes: int, cost: float) -> None:
+        assert kind in TRANSFER_KINDS, f"unknown transfer kind {kind!r}"
+        self.events.append(TransferEvent(frame, rid, kind, src, dst,
+                                         int(nbytes), float(cost)))
+
+    def totals(self) -> Dict[str, Dict[str, float]]:
+        out = {k: {"count": 0, "nbytes": 0, "cost": 0.0}
+               for k in TRANSFER_KINDS}
+        for ev in self.events:
+            t = out[ev.kind]
+            t["count"] += 1
+            t["nbytes"] += ev.nbytes
+            t["cost"] += ev.cost
+        return out
 
 
 @dataclasses.dataclass

@@ -114,9 +114,13 @@ class ServingPolicy:
             cur_node[s] = req.node
             chain[s] = PENDING if req.blocks_done == 0 else 1
             # the sim's m^{t-1}: 1 only on the quantum right after the
-            # upload (= admission), not for every not-yet-started chain
-            uploaded[s] = req.rid not in self._seen
-            if req.rid not in self._seen:
+            # upload (= admission) of a FRESH chain — not for every
+            # not-yet-started chain, and not for a handed-over mid-chain
+            # request this bridge is seeing for the first time (uploaded
+            # never co-occurs with blocks_done > 0 in sim training)
+            first_seen = req.rid not in self._seen
+            uploaded[s] = first_seen and req.blocks_done == 0
+            if first_seen:
                 self._seen.add(req.rid)
                 if not self._poa_fed:
                     self._last_poa[s] = req.origin     # fallback PoA
@@ -185,6 +189,33 @@ def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
     return ServingEngine(nodes, ecfg, grid_trans_cost(cfg)), world
 
 
+def submit_arrivals(engine: ServingEngine, trace, t: int,
+                    outstanding: np.ndarray, services: Dict[int, object],
+                    rng: np.random.Generator, rid: int) -> int:
+    """Submit frame ``t``'s idle-gated arrivals from ``trace`` to ``engine``.
+
+    THE one submission rule for single-cell (:func:`serve_trace`) and fleet
+    (:func:`repro.serving.cluster.serve_fleet`) serving — idle gating via
+    ``outstanding`` (mutated in place), per-(frame, UE) thresholds when the
+    trace carries a heavy-tailed mix (``qbar_t``), request origin = the
+    UE's PoA this frame.  Returns the next request id.
+    """
+    qbar_t = getattr(trace, "qbar_t", None)
+    for ue in np.where(trace.arrivals[t] & ~outstanding)[0]:
+        service = int(trace.service_of[ue])
+        svc = services[service]
+        state = svc.init_state(rng) if hasattr(svc, "init_state") else {}
+        thr = float(trace.qbar[ue]) if qbar_t is None \
+            else float(qbar_t[t, ue])
+        engine.submit(Request(
+            rid=rid, service=service, arrival_frame=t,
+            quality_threshold=thr, ue=int(ue),
+            origin=int(trace.poa[t, ue]), state=state))
+        outstanding[ue] = True
+        rid += 1
+    return rid
+
+
 def serve_trace(engine: ServingEngine, trace, services: Dict[int, object], *,
                 seed: int = 0) -> Dict[str, float]:
     """Feed a :class:`repro.sim.scenarios.RequestTrace` through an engine.
@@ -201,18 +232,11 @@ def serve_trace(engine: ServingEngine, trace, services: Dict[int, object], *,
     rid = 0
     update_poa = getattr(engine.placement_fn, "update_poa", None)
     for t in range(trace.frames):
+        engine.set_poa(trace.poa[t])     # per-node admission + downlink leg
         if update_poa is not None:
             update_poa(trace.poa[t])
-        for ue in np.where(trace.arrivals[t] & ~outstanding)[0]:
-            service = int(trace.service_of[ue])
-            svc = services[service]
-            state = svc.init_state(rng) if hasattr(svc, "init_state") else {}
-            engine.submit(Request(
-                rid=rid, service=service, arrival_frame=t,
-                quality_threshold=float(trace.qbar[ue]), ue=int(ue),
-                origin=int(trace.poa[t, ue]), state=state))
-            outstanding[ue] = True
-            rid += 1
+        rid = submit_arrivals(engine, trace, t, outstanding, services, rng,
+                              rid)
         engine.step()
         for req in engine.completed[completed_cursor:]:
             if req.ue >= 0:

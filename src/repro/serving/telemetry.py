@@ -1,0 +1,179 @@
+"""Per-quantum serving telemetry: typed trace events + JSON schema.
+
+Every scheduling quantum of a :class:`~repro.serving.engine.ServingEngine`
+(standalone or as one cell of a :class:`~repro.serving.cluster.ClusterEngine`)
+emits one :class:`QuantumEvent`: queue depth, admission counts, per-node
+load/capacity, and the quantum's cost decomposition into the C9 legs
+(uplink / compute / migration / handover / downlink).  The log serializes to
+a versioned JSON document validated against :data:`TELEMETRY_SCHEMA` — the
+contract ``benchmarks/bench_cluster.py`` and external consumers read, and
+the round-trip (``to_json`` → ``validate`` → ``from_json``) is pinned by
+``tests/test_workloads.py``.
+
+No external schema library: :func:`validate` is a minimal checker for the
+subset of JSON Schema the contract uses (type / required / properties /
+items).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List
+
+import numpy as np
+
+TELEMETRY_VERSION = "repro.serving.telemetry/1"
+
+LEGS = ("uplink", "compute", "migration", "handover", "downlink")
+
+_EVENT_SCHEMA = {
+    "type": "object",
+    "required": ["frame", "cell", "queue_depth", "admitted", "dropped",
+                 "active", "delivered", "node_load", "node_capacity", "legs"],
+    "properties": {
+        "frame": {"type": "integer"},
+        "cell": {"type": "integer"},
+        "queue_depth": {"type": "integer"},
+        "admitted": {"type": "integer"},
+        "dropped": {"type": "integer"},
+        "active": {"type": "integer"},
+        "delivered": {"type": "integer"},
+        "node_load": {"type": "array", "items": {"type": "integer"}},
+        "node_capacity": {"type": "array", "items": {"type": "integer"}},
+        "legs": {
+            "type": "object",
+            "required": list(LEGS),
+            "properties": {leg: {"type": "number"} for leg in LEGS},
+        },
+    },
+}
+
+TELEMETRY_SCHEMA = {
+    "type": "object",
+    "required": ["version", "events"],
+    "properties": {
+        "version": {"type": "string"},
+        "events": {"type": "array", "items": _EVENT_SCHEMA},
+    },
+}
+
+
+def validate(doc, schema=TELEMETRY_SCHEMA, path: str = "$") -> None:
+    """Check ``doc`` against the schema subset the telemetry contract uses;
+    raises ``ValueError`` naming the offending path."""
+    kind = schema.get("type")
+    if kind == "object":
+        if not isinstance(doc, dict):
+            raise ValueError(f"{path}: expected object, got {type(doc).__name__}")
+        for key in schema.get("required", ()):
+            if key not in doc:
+                raise ValueError(f"{path}: missing required key {key!r}")
+        for key, sub in schema.get("properties", {}).items():
+            if key in doc:
+                validate(doc[key], sub, f"{path}.{key}")
+    elif kind == "array":
+        if not isinstance(doc, list):
+            raise ValueError(f"{path}: expected array, got {type(doc).__name__}")
+        items = schema.get("items")
+        if items is not None:
+            for i, item in enumerate(doc):
+                validate(item, items, f"{path}[{i}]")
+    elif kind == "integer":
+        if not isinstance(doc, int) or isinstance(doc, bool):
+            raise ValueError(f"{path}: expected integer, got {doc!r}")
+    elif kind == "number":
+        if isinstance(doc, bool) or not isinstance(doc, (int, float)):
+            raise ValueError(f"{path}: expected number, got {doc!r}")
+    elif kind == "string":
+        if not isinstance(doc, str):
+            raise ValueError(f"{path}: expected string, got {doc!r}")
+    else:
+        raise ValueError(f"{path}: unsupported schema type {kind!r}")
+
+
+@dataclasses.dataclass
+class QuantumEvent:
+    """One scheduling quantum of one cell."""
+    frame: int
+    cell: int
+    queue_depth: int                 # pending requests after admission
+    admitted: int                    # admitted this quantum
+    dropped: int                     # requests denied their FIRST slot this
+    #                                  quantum (each request counts once, so
+    #                                  summed drops never exceed submissions)
+    active: int                      # in-flight after the quantum
+    delivered: int                   # delivered this quantum
+    node_load: List[int]             # blocks executed per node
+    node_capacity: List[int]         # W_hat per node
+    legs: Dict[str, float]           # costs CHARGED this quantum, per LEG
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["node_load"] = [int(x) for x in self.node_load]
+        d["node_capacity"] = [int(x) for x in self.node_capacity]
+        d["legs"] = {k: float(self.legs.get(k, 0.0)) for k in LEGS}
+        return d
+
+
+class TelemetryLog:
+    """Append-only per-quantum event log with a validated JSON round-trip."""
+
+    def __init__(self):
+        self.events: List[QuantumEvent] = []
+
+    def record(self, event: QuantumEvent) -> None:
+        self.events.append(event)
+
+    # -- aggregates (what bench_cluster reports) -------------------------------
+
+    def utilization(self) -> float:
+        """Mean per-node load / capacity over all recorded quanta."""
+        if not self.events:
+            return 0.0
+        ratios = [np.asarray(ev.node_load) /
+                  np.maximum(np.asarray(ev.node_capacity), 1)
+                  for ev in self.events]
+        return float(np.mean(ratios))
+
+    def leg_totals(self) -> Dict[str, float]:
+        out = {k: 0.0 for k in LEGS}
+        for ev in self.events:
+            for k in LEGS:
+                out[k] += float(ev.legs.get(k, 0.0))
+        return out
+
+    def summary(self) -> Dict[str, float]:
+        depth = [ev.queue_depth for ev in self.events]
+        return {
+            "quanta": len(self.events),
+            "mean_queue_depth": float(np.mean(depth)) if depth else 0.0,
+            "max_queue_depth": int(np.max(depth)) if depth else 0,
+            "admitted": int(sum(ev.admitted for ev in self.events)),
+            "dropped": int(sum(ev.dropped for ev in self.events)),
+            "delivered": int(sum(ev.delivered for ev in self.events)),
+            "mean_node_utilization": self.utilization(),
+            "legs": self.leg_totals(),
+        }
+
+    # -- JSON round-trip -------------------------------------------------------
+
+    def to_json(self) -> dict:
+        doc = {"version": TELEMETRY_VERSION,
+               "events": [ev.to_json() for ev in self.events]}
+        validate(doc)
+        return doc
+
+    @classmethod
+    def from_json(cls, doc: dict) -> "TelemetryLog":
+        validate(doc)
+        if doc["version"] != TELEMETRY_VERSION:
+            raise ValueError(f"telemetry version mismatch: {doc['version']!r}")
+        log = cls()
+        for ev in doc["events"]:
+            log.record(QuantumEvent(
+                frame=ev["frame"], cell=ev["cell"],
+                queue_depth=ev["queue_depth"], admitted=ev["admitted"],
+                dropped=ev["dropped"], active=ev["active"],
+                delivered=ev["delivered"], node_load=list(ev["node_load"]),
+                node_capacity=list(ev["node_capacity"]),
+                legs=dict(ev["legs"])))
+        return log

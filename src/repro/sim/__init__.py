@@ -4,3 +4,7 @@ from repro.sim.quality import from_gdm_model, synthetic_curves  # noqa: F401
 from repro.sim.scenarios import (get_scenario, register_scenario,  # noqa: F401
                                  scenario_descriptions, scenario_names)
 from repro.sim.vec_env import VecEdgeSimulator  # noqa: F401
+from repro.sim.workloads import (FleetTrace, arrival_envelope,  # noqa: F401
+                                 fleet_trace, get_workload,
+                                 register_workload, workload_descriptions,
+                                 workload_names, workload_trace)

@@ -18,7 +18,7 @@ where it belongs, in ``SimConfig.seed``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
@@ -73,6 +73,12 @@ class RequestTrace:
     poa: np.ndarray                  # (T, U) int  — UE PoA per frame
     qbar: np.ndarray                 # (U,) quality thresholds (world draw)
     service_of: np.ndarray           # (U,) service assignment (world draw)
+    # optional nonstationary annotations (repro.sim.workloads): the arrival
+    # rate envelope the trace was drawn from, per-(frame, UE) thresholds for
+    # heavy-tailed service mixes, and the generating workload's name
+    rates: Optional[np.ndarray] = None        # (T,) arrival prob per frame
+    qbar_t: Optional[np.ndarray] = None       # (T, U) per-arrival thresholds
+    workload: str = "stationary"
 
 
 def request_trace(cfg: SimConfig, frames: int, seed: int = 0) -> RequestTrace:

@@ -70,7 +70,23 @@ def test_migration_cost_accounted():
     eng.submit(_req(0, thr=0.95))
     eng.run(6)
     req = eng.completed[0]
-    assert req.trans_cost == pytest.approx(0.2 * 3)   # three hops
+    # three latent hops (0->1, 1->0, 0->1) + the C9 downlink leg back to
+    # the request's origin PoA (node 1 -> node 0)
+    assert req.migration_cost == pytest.approx(0.2 * 3)
+    assert req.downlink_cost == pytest.approx(0.2)
+    assert req.uplink_cost == 0.0                     # first block at origin
+    assert req.trans_cost == pytest.approx(0.2 * 4)
+
+
+def test_downlink_leg_optional():
+    eng = make_engine(n_nodes=2, capacity=2, charge_downlink=False)
+    eng.placement_fn = lambda req, loads: 1           # execute away from PoA
+    eng.submit(_req(0, thr=0.95))
+    eng.run(6)
+    req = eng.completed[0]
+    assert req.downlink_cost == 0.0
+    assert req.uplink_cost == pytest.approx(0.2)      # origin 0 -> node 1
+    assert req.trans_cost == pytest.approx(req.uplink_cost)
 
 
 def test_admission_priority_threshold_closest_first():
@@ -96,6 +112,76 @@ def test_admission_priority_threshold_closest_first():
     eng._admit()
     assert eng.active[-1].rid == 2          # closest-below among {0, 2, 3, 4}
     assert [r.rid for r in eng.pending] == [0, 3, 4]
+
+
+def test_admission_per_node_slots_not_global():
+    """The sim's per-BS MAC: C slots per entry node per quantum, not the top
+    C·N globally.  Three high-priority requests at node 0 and one
+    low-priority request at node 1: the global rule would admit the three
+    node-0 requests first; the per-node rule admits one per node."""
+    eng = make_engine(n_nodes=2, capacity=2)
+    eng.cfg = EngineConfig(max_blocks=4, admission_slots=1)
+    for rid, (origin, thr) in enumerate([(0, 0.05), (0, 0.06), (0, 0.07),
+                                         (1, 0.9)]):
+        req = _req(rid, thr=thr)
+        req.origin = origin
+        eng.submit(req)
+    eng._admit()
+    assert sorted(r.rid for r in eng.active) == [0, 3]
+    assert [r.rid for r in eng.pending] == [1, 2]
+    # the current-PoA stream overrides the arrival origin: UE 2's pending
+    # request moved to node 1's cell, so it competes (and wins) there
+    eng.active.clear()
+    for r in eng.pending:
+        r.admitted = False
+    eng.pending[0].ue, eng.pending[1].ue = 0, 1
+    eng.set_poa(np.array([0, 1]))
+    eng._admit()
+    assert sorted(r.rid for r in eng.active) == [1, 2]
+
+
+def test_uplink_charged_from_current_poa_not_stale_origin():
+    """A UE that moved while queued uplinks from where it IS (the set_poa
+    stream), mirroring the sim's src=prev_poa rule — not from the PoA it
+    happened to have at arrival."""
+    eng = make_engine(n_nodes=3, capacity=2)
+    eng.placement_fn = lambda req, loads: 0
+    req = _req(0, thr=0.95)
+    req.ue = 0
+    req.origin = 0
+    eng.submit(req)
+    eng.set_poa(np.array([2]))            # UE now at node 2's cell
+    eng.step()
+    assert req.uplink_cost == pytest.approx(0.4)     # y[2, 0], not y[0, 0]=0
+
+
+def test_state_nbytes_migration_hook():
+    from repro.serving.kv_manager import state_nbytes
+
+    assert state_nbytes({"migration_nbytes": 123}) == 123
+    assert state_nbytes({"migration_nbytes": lambda: 64}) == 64
+    arr = np.zeros((4, 2), np.float32)
+    assert state_nbytes({"latent": arr, "x0": None}) == arr.nbytes
+
+
+def test_transfer_ledger_records_all_legs():
+    from repro.serving.kv_manager import TransferLedger, state_nbytes
+
+    ledger = TransferLedger()
+    eng = make_engine(n_nodes=2, capacity=2)
+    eng.ledger = ledger
+    forced = [0, 1, 1, 1]
+    eng.placement_fn = lambda req, loads: forced[req.blocks_done]
+    req = _req(0, thr=0.95)
+    req.state = {"latent": np.zeros((4, 2), np.float32)}
+    eng.submit(req)
+    eng.run(6)
+    totals = ledger.totals()
+    assert totals["migration"]["count"] == 1          # the 0 -> 1 hop
+    assert totals["downlink"]["count"] == 1           # node 1 -> origin 0
+    assert totals["migration"]["nbytes"] == state_nbytes(req.state) > 0
+    assert totals["migration"]["cost"] + totals["downlink"]["cost"] == \
+        pytest.approx(req.trans_cost)
 
 
 def test_satisfied_request_ranked_last_regression():

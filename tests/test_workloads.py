@@ -1,0 +1,181 @@
+"""Workload generator + telemetry contracts.
+
+* arrival-count determinism: traces are pure functions of
+  ``(cfg.seed, seed)`` — identical under replay, different across seeds;
+* rate-envelope correctness for the diurnal / flash-crowd envelopes (and
+  the stationary workload replays the legacy ``request_trace`` exactly);
+* telemetry JSON schema round-trip (``to_json`` → ``validate`` →
+  ``from_json``) and rejection of malformed documents.
+"""
+import numpy as np
+import pytest
+
+from repro.serving.telemetry import (QuantumEvent, TelemetryLog,
+                                     TELEMETRY_VERSION, validate)
+from repro.sim.scenarios import get_scenario, request_trace
+from repro.sim.workloads import (arrival_envelope, fleet_trace, get_workload,
+                                 workload_names, workload_trace)
+
+
+CFG = get_scenario("smoke")
+
+
+def test_registry_lists_the_shipped_workloads():
+    names = workload_names()
+    for name in ("stationary", "diurnal", "flash-crowd", "mmpp",
+                 "heavy-tail"):
+        assert name in names
+    with pytest.raises(KeyError):
+        get_workload("nope")
+
+
+def test_stationary_replays_request_trace_exactly():
+    """The composition contract: workload_trace is request_trace + an
+    envelope, drawn in the same order — stationary IS the legacy trace."""
+    legacy = request_trace(CFG, 12, seed=3)
+    trace = workload_trace(CFG, 12, "stationary", seed=3)
+    np.testing.assert_array_equal(trace.arrivals, legacy.arrivals)
+    np.testing.assert_array_equal(trace.poa, legacy.poa)
+    np.testing.assert_array_equal(trace.qbar, legacy.qbar)
+    np.testing.assert_array_equal(trace.service_of, legacy.service_of)
+
+
+@pytest.mark.parametrize("workload", ["stationary", "diurnal", "flash-crowd",
+                                      "mmpp", "heavy-tail"])
+def test_arrival_count_determinism_under_fixed_seed(workload):
+    a = workload_trace(CFG, 20, workload, seed=7)
+    b = workload_trace(CFG, 20, workload, seed=7)
+    np.testing.assert_array_equal(a.arrivals, b.arrivals)
+    np.testing.assert_array_equal(a.poa, b.poa)
+    if a.qbar_t is not None:
+        np.testing.assert_array_equal(a.qbar_t, b.qbar_t)
+    c = workload_trace(CFG, 20, workload, seed=8)
+    assert not np.array_equal(a.arrivals, c.arrivals)
+
+
+def test_diurnal_rate_envelope():
+    base, amp, period = 0.4, 0.5, 40
+    rates = arrival_envelope("diurnal", CFG, 40, base=base, amp=amp,
+                             period=period)
+    assert rates[0] == pytest.approx(base)               # phase 0 start
+    assert rates[period // 4] == pytest.approx(base * (1 + amp))   # peak
+    assert rates[3 * period // 4] == pytest.approx(base * (1 - amp))
+    assert np.all((rates >= 0.0) & (rates <= 1.0))
+    # full-swing amplitude clips instead of going negative
+    clipped = arrival_envelope("diurnal", CFG, 40, base=0.6, amp=1.0)
+    assert np.all(clipped >= 0.0) and np.max(clipped) == 1.0
+
+
+def test_flash_crowd_rate_envelope_and_arrivals():
+    rates = arrival_envelope("flash-crowd", CFG, 30, base=0.1, peak=0.9,
+                             start=10, duration=5)
+    assert np.all(rates[10:15] == 0.9)
+    assert np.all(rates[:10] == 0.1) and np.all(rates[15:] == 0.1)
+    # base=0 makes the window containment exact on the arrivals themselves
+    trace = workload_trace(CFG, 30, "flash-crowd", seed=1, base=0.0,
+                           peak=1.0, start=10, duration=5)
+    assert not trace.arrivals[:10].any() and not trace.arrivals[15:].any()
+    assert trace.arrivals[10:15].all()                   # rate 1.0 fires all
+
+
+def test_mmpp_rates_are_two_state():
+    rates = arrival_envelope("mmpp", CFG, 200, seed=0, low=0.05, high=0.8)
+    assert set(np.unique(rates)) == {0.05, 0.8}
+    assert 0 < np.mean(rates == 0.8) < 1                 # both states visited
+
+
+def test_heavy_tail_service_mix():
+    trace = workload_trace(CFG, 50, "heavy-tail", seed=0, tail_prob=0.2,
+                           tail_qbar=0.95)
+    q = trace.qbar_t
+    assert q is not None and q.shape == (50, CFG.num_ues)
+    assert np.all((q >= CFG.qbar_low) & (q <= 0.95))
+    tail_frac = np.mean(q > CFG.qbar_high)
+    assert 0.05 < tail_frac < 0.4                        # ~tail_prob
+
+
+def test_fleet_trace_handover_schedule_is_well_formed():
+    fleet = fleet_trace(CFG, 20, 3, seed=4, handover_rate=0.1)
+    assert fleet.num_cells == 3
+    assert len(fleet.cells) == 3
+    h = fleet.handovers
+    assert h.shape[1] == 4
+    assert len(h) > 0
+    frames, ues, src, dst = h.T
+    assert np.all((frames >= 1) & (frames < 20))
+    assert np.all((ues >= 0) & (ues < CFG.num_ues))
+    assert np.all(src != dst)
+    assert np.all((src >= 0) & (src < 3) & (dst >= 0) & (dst < 3))
+    # per-cell traces are independent streams
+    assert not np.array_equal(fleet.cells[0].arrivals,
+                              fleet.cells[1].arrivals)
+
+
+# -- telemetry schema ----------------------------------------------------------
+
+def _event(frame=0, cell=0):
+    return QuantumEvent(frame=frame, cell=cell, queue_depth=2, admitted=3,
+                        dropped=2, active=4, delivered=1,
+                        node_load=[1, 0], node_capacity=[2, 2],
+                        legs={"uplink": 0.2, "compute": 1.0,
+                              "migration": 0.4, "handover": 0.0,
+                              "downlink": 0.2})
+
+
+def test_telemetry_json_round_trip():
+    log = TelemetryLog()
+    for t in range(3):
+        for c in range(2):
+            log.record(_event(frame=t, cell=c))
+    doc = log.to_json()
+    assert doc["version"] == TELEMETRY_VERSION
+    validate(doc)                                        # self-validating
+    back = TelemetryLog.from_json(doc)
+    assert back.to_json() == doc
+    assert len(back.events) == 6
+    assert back.summary() == log.summary()
+
+
+def test_telemetry_validation_rejects_malformed_documents():
+    doc = TelemetryLog().to_json()
+    with pytest.raises(ValueError, match="version"):
+        TelemetryLog.from_json({"events": []})
+    bad_event = {**_event().to_json()}
+    del bad_event["queue_depth"]
+    with pytest.raises(ValueError, match="queue_depth"):
+        validate({"version": TELEMETRY_VERSION, "events": [bad_event]})
+    wrong_type = _event().to_json()
+    wrong_type["node_load"] = "not-a-list"
+    with pytest.raises(ValueError, match="node_load"):
+        validate({"version": TELEMETRY_VERSION, "events": [wrong_type]})
+    assert doc["events"] == []
+
+
+def test_engine_emits_schema_valid_telemetry(tmp_path):
+    """End to end: a real (single-cell) engine run serializes to a document
+    that survives the disk round-trip."""
+    import json
+
+    from repro.serving import TelemetryLog as TL
+    from repro.serving import engine_from_scenario, serve_trace
+
+    class Svc:
+        omega = np.minimum(0.3 * np.arange(5), 1.0)
+
+        def block_fn(self, state, k):
+            return dict(state or {}), min(0.3 * (k + 1), 1.0)
+
+        def init_state(self, rng):
+            return {}
+
+    telemetry = TL()
+    services = {s: Svc() for s in range(CFG.num_services)}
+    engine, _ = engine_from_scenario(CFG, services)
+    engine.telemetry = telemetry
+    serve_trace(engine, workload_trace(CFG, 10, "diurnal", seed=1),
+                services, seed=1)
+    assert len(telemetry.events) == 10
+    path = tmp_path / "telemetry.json"
+    path.write_text(json.dumps(telemetry.to_json()))
+    back = TelemetryLog.from_json(json.loads(path.read_text()))
+    assert back.to_json() == telemetry.to_json()
