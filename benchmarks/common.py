@@ -6,7 +6,14 @@ paper's 5,000-episode Fig. 3).  Engine selection is shared with the
 experiment layer (``repro.experiments``): ``REPRO_BENCH_ENGINE``
 (scalar | vectorized | fused), ``REPRO_BENCH_NUM_ENVS`` (stacked width),
 ``REPRO_BENCH_EVAL_ENGINE`` (evaluation path), and
-``REPRO_BENCH_SCENARIOS`` (default list for the named-scenario sweep)."""
+``REPRO_BENCH_SCENARIOS`` (default list for the named-scenario sweep).
+
+``REPRO_BENCH_DEVICES`` (read by ``benchmarks.run`` BEFORE the first jax
+import) forces that many fake host devices via
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` so the mesh-sharded
+bench rows exist even on a 1-device CPU host; ``run_meta()`` stamps every
+BENCH_*.json with the device count / backend / wall-clock so scaling
+curves across PRs are comparable."""
 from __future__ import annotations
 
 import os
@@ -15,6 +22,21 @@ from typing import Callable, Iterable
 
 SCALE = float(os.environ.get("REPRO_BENCH_SCALE", "1.0"))
 RESULTS_DIR = os.environ.get("REPRO_BENCH_OUT", "results/bench")
+
+
+def run_meta() -> dict:
+    """Standard BENCH_*.json metadata: device count, backend, wall-clock.
+
+    jax is imported lazily so importing this module never initializes the
+    backend (``REPRO_BENCH_DEVICES`` must be applied first).
+    """
+    import jax
+    return {
+        "devices": len(jax.devices()),
+        "backend": jax.default_backend(),
+        "scale": SCALE,
+        "timestamp": time.time(),
+    }
 
 
 def scaled(n: int, lo: int = 1) -> int:

@@ -24,9 +24,19 @@ import inspect
 import json
 import os
 import sys
+import time
 import traceback
 
-from benchmarks.common import RESULTS_DIR
+# REPRO_BENCH_DEVICES=N forces N fake host devices for the mesh-sharded
+# bench rows.  Must happen before ANY jax backend init — the bench modules
+# import jax at module top, so this runs at harness import time.
+_DEVICES = os.environ.get("REPRO_BENCH_DEVICES", "")
+if _DEVICES and int(_DEVICES) > 1:
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "") +
+        f" --xla_force_host_platform_device_count={_DEVICES}").strip()
+
+from benchmarks.common import RESULTS_DIR, run_meta
 
 
 BENCHES = {
@@ -79,13 +89,16 @@ def main() -> None:
             if scenario and \
                     "scenario" in inspect.signature(mod.run).parameters:
                 kwargs["scenario"] = scenario
+            t0 = time.perf_counter()
             result = mod.run(**kwargs)
+            wall_s = time.perf_counter() - t0
             if isinstance(result, dict):
                 os.makedirs(RESULTS_DIR, exist_ok=True)
                 path = os.path.join(RESULTS_DIR, f"BENCH_{name}.json")
+                meta = dict(run_meta(), wall_s=wall_s)
                 with open(path, "w") as f:
-                    json.dump({"bench": name, "result": result}, f,
-                              indent=2, default=float)
+                    json.dump({"bench": name, "meta": meta,
+                               "result": result}, f, indent=2, default=float)
         except Exception as e:                                # noqa: BLE001
             failures += 1
             print(f"{name},nan,ERROR {type(e).__name__}: {e}")

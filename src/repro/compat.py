@@ -11,6 +11,9 @@ sprinkle try/except over the codebase.  Currently shimmed:
   does not accept it.
 * ``shard_map`` — ``jax.shard_map`` vs ``jax.experimental.shard_map``;
   translates ``check_vma=`` to the old ``check_rep=`` spelling.
+* ``P`` / ``NamedSharding`` — ``jax.P`` (newest spelling) vs
+  ``jax.sharding.PartitionSpec``; re-exported here so spec-building call
+  sites don't repeat the fallback.
 """
 from __future__ import annotations
 
@@ -19,6 +22,13 @@ import inspect
 from typing import Optional, Tuple
 
 import jax
+
+try:
+    P = jax.P  # type: ignore[attr-defined]
+except AttributeError:  # pragma: no cover - depends on installed jax
+    from jax.sharding import PartitionSpec as P  # noqa: N814
+
+from jax.sharding import NamedSharding  # noqa: F401  (re-export)
 
 try:
     from jax.sharding import AxisType  # type: ignore[attr-defined]

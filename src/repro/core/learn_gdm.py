@@ -18,6 +18,7 @@ checkers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -275,19 +276,45 @@ class LearnGDMController:
     # -- fused (device-resident) training --------------------------------------
 
     def _build_fused_round(self, world: jax_env.JaxWorld, num_envs: int,
-                           replay: DeviceReplay):
+                           replay: DeviceReplay, mesh=None,
+                           axis: str = "env"):
         """Compile one training *round* — jax reset + a ``lax.scan`` over the
         whole episode (act → env step → device replay push → D3QL update per
         frame) — as a single jitted function.  The agent/replay carry crosses
         rounds on device; the only host sync per round is the tiny stats
-        pull in :meth:`train_fused`."""
+        pull in :meth:`train_fused`.
+
+        With ``mesh`` (1-D, axis ``axis``), the whole round body runs under
+        ``shard_map`` with the env dim sharded.  The design keeps sharded ==
+        unsharded EXACT (not just statistical):
+
+        * all round randomness — including the reset draws — is hoisted into
+          global (T, E, ...) / (E, ...) stacks outside the shard body, so
+          each shard consumes slices of the one stream;
+        * env math is strictly per-env (no cross-env arithmetic), so shards
+          evolve their env slices independently;
+        * each frame's transitions are ``all_gather``-ed back to the global
+          env order before ``replay.push``, and the D3QL update runs
+          REPLICATED on every shard from that identical replay — the same
+          full-batch gradient everywhere, no psum reduction-order drift.
+        """
         agent, cfg = self.agent, self.env.cfg
         acfg = agent.cfg
         variant, mac_scheme = self.variant, self.mac_scheme
         h, horizon = acfg.history, cfg.horizon
         update_fn = agent.update_fn
+        num_shards = 1 if mesh is None else mesh.shape[axis]
+        assert num_envs % num_shards == 0, (num_envs, num_shards)
+        if num_shards > 1:
+            def to_global(x):
+                return jax.lax.all_gather(x, axis, axis=0, tiled=True)
+        else:
+            def to_global(x):
+                return x
 
-        def frame_fn(carry, draws):
+        # ``world`` is a parameter (not the closure) so the shard_map body
+        # sees the per-shard (E/shards, ...) slice, not the global stack
+        def frame_fn(world, carry, draws):
             (params, target, opt_state, rstate, state, obs_hist,
              epsilon, steps) = carry
 
@@ -311,8 +338,11 @@ class LearnGDMController:
             next_hist = jnp.concatenate(
                 [obs_hist[:, 1:], next_obs[:, None]], axis=1)
             done = (state.frame >= horizon).astype(jnp.float32)
-            rstate = replay.push(rstate, obs_hist, actions, info["rewards"],
-                                 next_hist, jnp.full((num_envs,), done))
+            rstate = replay.push(rstate, to_global(obs_hist),
+                                 to_global(actions),
+                                 to_global(info["rewards"]),
+                                 to_global(next_hist),
+                                 jnp.full((num_envs,), done))
 
             can_train = rstate.size >= acfg.batch_size
 
@@ -337,15 +367,65 @@ class LearnGDMController:
             return ((params, target, opt_state, rstate, state, next_hist,
                      epsilon, steps), (info["rewards"], loss))
 
-        def round_fn(carry, round_key):
-            params, target, opt_state, rstate, epsilon, steps = carry
-            keys = jax.random.split(round_key, 8)
-            state = jax_env.reset_env(cfg, world, keys[0])
+        def scan_round(world, params, target, opt_state, rstate, epsilon,
+                       steps, state_key, reset_draws, draws):
+            """Reset + the full-episode scan — the (shardable) round body."""
+            state = jax_env.reset_env(cfg, world, state_key,
+                                      pos_draws=reset_draws["pos"],
+                                      dest_draws=reset_draws["dest"],
+                                      req_draws=reset_draws["req"])
             obs0 = jax_env.observe(cfg, world, state)
             obs_hist = jnp.repeat(obs0[:, None], h, axis=1)   # (E, H, obs)
+            (params, target, opt_state, rstate, state, _, epsilon, steps), \
+                (rewards, losses) = jax.lax.scan(
+                    functools.partial(frame_fn, world),
+                    (params, target, opt_state, rstate, state, obs_hist,
+                     epsilon, steps),
+                    draws)
+            return ((params, target, opt_state, rstate, epsilon, steps),
+                    (rewards.sum(axis=0), losses, state.total_delivered))
+
+        if mesh is not None:
+            # carry/replay/update replicated; world, reset draws (E, ...)
+            # and frame draws (T, E, ...) sharded on the env dim, except the
+            # replay-sample uniforms every shard must consume identically.
+            # check_vma=False: the replicated agent/replay carry through
+            # lax.scan+cond trips the conservative replication checker on
+            # older jax; the specs themselves guarantee replication here.
+            from repro.compat import P, shard_map
+            from repro.distributed.sharding import draw_specs
+            frame_draw_keys = ("explore", "q_rand", "arrival", "waypoint",
+                               "sample", "mac_attempt", "mac_channel")
+            scan_sharded = shard_map(
+                scan_round, mesh=mesh,
+                in_specs=(jax_env.world_specs(axis), P(), P(), P(), P(),
+                          P(), P(), P(),
+                          draw_specs(dict.fromkeys(("pos", "dest", "req")),
+                                     axis, env_dim=0),
+                          draw_specs(dict.fromkeys(frame_draw_keys), axis,
+                                     replicated=("sample",))),
+                out_specs=((P(), P(), P(), P(), P(), P()),
+                           (P(axis), P(), P(axis))),
+                check_vma=False)
+        else:
+            scan_sharded = scan_round
+
+        def round_fn(carry, round_key):
+            params, target, opt_state, rstate, epsilon, steps = carry
+            keys = jax.random.split(round_key, 11)
             # whole-round randomness in a few batched draws (per-frame
-            # threefry inside the scan is an XLA:CPU hot spot)
+            # threefry inside the scan is an XLA:CPU hot spot).  Reset draws
+            # are hoisted too (keys 8-10) so the sharded and unsharded
+            # rounds consume ONE identical stream — exact equivalence.
             t, e, u = horizon, num_envs, acfg.num_ues
+            fdtype = world.qbar.dtype
+            reset_draws = {
+                "pos": jax.random.uniform(keys[8], (e, u, 2), fdtype,
+                                          0.0, cfg.side),
+                "dest": jax.random.uniform(keys[9], (e, u, 2), fdtype,
+                                           0.0, cfg.side),
+                "req": jax.random.uniform(keys[10], (e, u), fdtype),
+            }
             draws = {
                 "explore": jax.random.uniform(keys[1], (t, e)),
                 "q_rand": jax.random.uniform(
@@ -358,21 +438,16 @@ class LearnGDMController:
                 "mac_attempt": jax.random.uniform(keys[6], (t, e, u)),
                 "mac_channel": jax.random.uniform(keys[7], (t, e, u)),
             }
-            (params, target, opt_state, rstate, state, _, epsilon, steps), \
-                (rewards, losses) = jax.lax.scan(
-                    frame_fn,
-                    (params, target, opt_state, rstate, state, obs_hist,
-                     epsilon, steps),
-                    draws)
-            out = (rewards.sum(axis=0), losses, state.total_delivered)
-            return (params, target, opt_state, rstate, epsilon, steps), out
+            return scan_sharded(world, params, target, opt_state, rstate,
+                                epsilon, steps, keys[0], reset_draws, draws)
 
         if jax.default_backend() in ("gpu", "tpu"):
             return jax.jit(round_fn, donate_argnums=(0,))
         return jax.jit(round_fn)
 
     def train_fused(self, episodes: int, *, num_envs: int = 8,
-                    log_every: int = 0, seed: int = 0) -> Dict[str, list]:
+                    log_every: int = 0, seed: int = 0,
+                    mesh=None, mesh_axis: str = "env") -> Dict[str, list]:
         """Algorithm 1 as ONE device program per round: jax reset + a
         jit-compiled ``lax.scan`` chunk running act (epsilon-greedy in-scan)
         → ``jax_env.env_step`` → device-resident replay push → D3QL update
@@ -389,6 +464,11 @@ class LearnGDMController:
         so :meth:`evaluate` and further training see the fused progress.
         Returns the same history dict as :meth:`train` (one entry per
         episode, trimmed to ``episodes``).
+
+        ``mesh`` (e.g. ``repro.launch.mesh.make_env_mesh``) shards the round
+        over the env dim — EXACTLY equivalent to the single-device path
+        under the same seed (see :meth:`_build_fused_round`); ``num_envs``
+        must be divisible by the mesh size.
         """
         agent, cfg = self.agent, self.env.cfg
         acfg = agent.cfg
@@ -397,9 +477,11 @@ class LearnGDMController:
         # the whole scan every call).  The config fields are part of the key
         # because they are baked into the trace — mutating e.g.
         # agent.cfg.epsilon_decay between calls must not hit a stale round.
+        mesh_key = None if mesh is None else \
+            (mesh_axis, tuple(mesh.devices.shape))
         cache_key = (num_envs, acfg.epsilon_decay, acfg.epsilon_floor,
                      acfg.target_sync, acfg.batch_size, acfg.memory_capacity,
-                     acfg.history, acfg.num_ues, acfg.num_actions)
+                     acfg.history, acfg.num_ues, acfg.num_actions, mesh_key)
         cache = getattr(self, "_fused_cache", None)
         if cache is None:
             cache = self._fused_cache = {}
@@ -409,7 +491,8 @@ class LearnGDMController:
                                   obs_shape=(acfg.history, self.env.obs_dim),
                                   action_shape=(acfg.num_ues,))
             cache[cache_key] = (
-                replay, self._build_fused_round(world, num_envs, replay))
+                replay, self._build_fused_round(world, num_envs, replay,
+                                                mesh, mesh_axis))
         replay, round_fn = cache[cache_key]
 
         carry = (agent.params, agent.target_params, agent.opt_state,
@@ -441,7 +524,7 @@ class LearnGDMController:
     def evaluate(self, episodes: int, *, seed0: int = 9_000,
                  engine: str = "vectorized",
                  num_envs: Optional[int] = None,
-                 seed: int = 0) -> Dict[str, float]:
+                 seed: int = 0, mesh=None) -> Dict[str, float]:
         """Greedy-policy evaluation through the unified policy/engine seam.
 
         engine: "vectorized" (default — batched numpy rollout; per-episode
@@ -456,7 +539,7 @@ class LearnGDMController:
         return evaluate_policy(
             LearnedPolicy(self.agent, self.variant), self.env, episodes,
             engine=engine, num_envs=num_envs, seed0=seed0, seed=seed,
-            mac_scheme=self.mac_scheme,
+            mac_scheme=self.mac_scheme, mesh=mesh,
             scalar_episode=lambda s: self.run_episode(train=False, seed=s))
 
 

@@ -297,7 +297,8 @@ _EVAL_ROUNDS: Dict[Tuple, object] = {}
 
 def evaluate_fused(policy: Policy, env: EdgeSimulator, episodes: int, *,
                    num_envs: Optional[int] = None, seed: int = 0,
-                   mac_scheme: str = "greedy") -> Dict[str, float]:
+                   mac_scheme: str = "greedy", mesh=None,
+                   mesh_axis: str = "env") -> Dict[str, float]:
     """Evaluate ``policy`` through one jitted ``lax.scan`` per round on the
     jax-native engine (zero host round-trips inside an episode).
 
@@ -305,18 +306,26 @@ def evaluate_fused(policy: Policy, env: EdgeSimulator, episodes: int, *,
     jax-native (``jax.random`` streams keyed by ``seed``), so per-episode
     trajectories are not numpy-matched — cross-engine logic equivalence is
     pinned separately under injected draws (``tests/test_policy_eval.py``).
+
+    ``mesh`` (e.g. ``repro.launch.mesh.make_env_mesh``) shards the round
+    over the env dim.  ``state0`` and the draws are built host-side either
+    way, so the sharded round consumes the exact same inputs as the
+    single-device one and the results are identical (pinned in
+    ``tests/test_mesh_sharding.py``); ``num_envs`` must divide evenly.
     """
     cfg = env.cfg
     e = num_envs or min(max(episodes, 1), 8)
     world = jax_env.world_from_sim(env, e)
     params, act_fn = policy.fused_spec(cfg)
+    mesh_key = None if mesh is None else \
+        (mesh_axis, tuple(mesh.devices.shape))
     cache_key = (cfg, e, mac_scheme, policy.history, policy.needs_obs,
-                 policy.fused_key())
+                 policy.fused_key(), mesh_key)
     round_fn = _EVAL_ROUNDS.get(cache_key)
     if round_fn is None:
         round_fn = _EVAL_ROUNDS[cache_key] = jax_env.build_eval_round(
             cfg, act_fn, mac_scheme=mac_scheme, history=policy.history,
-            needs_obs=policy.needs_obs)
+            needs_obs=policy.needs_obs, mesh=mesh, axis=mesh_axis)
     base_key = jax.random.PRNGKey(seed)
     stats: List[EpisodeStats] = []
     for rd in range(-(-episodes // e)):
@@ -343,7 +352,7 @@ def evaluate_policy(policy: Policy, env: EdgeSimulator, episodes: int, *,
                     engine: str = "vectorized",
                     num_envs: Optional[int] = None, seed0: int = 9_000,
                     seed: int = 0, mac_scheme: str = "greedy",
-                    scalar_episode=None) -> Dict[str, float]:
+                    mesh=None, scalar_episode=None) -> Dict[str, float]:
     """The one engine dispatcher behind every controller's ``evaluate``.
 
     ``scalar_episode(seed) -> EpisodeStats`` is the controller's legacy
@@ -357,7 +366,7 @@ def evaluate_policy(policy: Policy, env: EdgeSimulator, episodes: int, *,
                           for ep in range(episodes)])
     if engine == "fused":
         return evaluate_fused(policy, env, episodes, num_envs=num_envs,
-                              seed=seed, mac_scheme=mac_scheme)
+                              seed=seed, mac_scheme=mac_scheme, mesh=mesh)
     assert engine == "vectorized", f"unknown eval engine {engine!r}"
     return evaluate_batched(policy, env, episodes, seed0=seed0,
                             num_envs=num_envs, mac_scheme=mac_scheme)

@@ -232,6 +232,40 @@ def decode_state_specs(cfg: ModelConfig, shape: ShapeConfig, mesh,
     return jax.tree_util.tree_map_with_path(assign, state_shape)
 
 
+# ---------------------------------------------------------------------------
+# Env/batch data-parallel specs (mesh-sharded fused rollout + fleet serving)
+# ---------------------------------------------------------------------------
+
+def leading_axis_spec(mesh, axis: str, size: int, ndim: int = 1) -> P:
+    """Shard the leading dim over ``axis`` when divisible, else replicate
+    (the standard degrade rule applied to env/batch stacks)."""
+    if axis in mesh.axis_names and size % mesh.shape[axis] == 0:
+        return P(axis, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def draw_specs(draws: Dict[str, Any], axis: str, *, env_dim: int = 1,
+               replicated: Sequence[str] = ()) -> Dict[str, P]:
+    """PartitionSpecs for a fused-rollout draws dict.
+
+    Frame draws are (T, E, ...) stacks — the env axis sits at ``env_dim``
+    (1); reset draws are (E, ...) — ``env_dim=0``.  Keys in ``replicated``
+    (e.g. the replay ``"sample"`` uniforms, which every shard must consume
+    identically) get ``P()``.
+    """
+    def spec(k):
+        if k in replicated:
+            return P()
+        return P(*([None] * env_dim), axis)
+    return {k: spec(k) for k in draws}
+
+
+def batch_shardings(mesh, axis: str = "batch"):
+    """(sharded, replicated) NamedSharding pair for a leading-batch-dim
+    device call — the serving engine's stacked ``run_block_batched``."""
+    return NamedSharding(mesh, P(axis)), NamedSharding(mesh, P())
+
+
 def logits_spec(mesh, decode: bool = False, global_batch: int = 0) -> P:
     """Logits sharding: batch over dp (degraded if indivisible), vocab over
     model."""

@@ -37,6 +37,25 @@ def make_host_mesh(shape: Tuple[int, ...] = (1,),
     return make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
+def make_env_mesh(num_devices: Optional[int] = None, *,
+                  divides: Optional[int] = None, axis: str = "env"):
+    """1-D data-parallel mesh for the sharded fused rollout / fleet batch.
+
+    ``num_devices`` defaults to every visible device.  When ``divides`` is
+    given (the stacked env count E or the serving batch width), the mesh
+    degrades to the largest device count that divides it instead of failing
+    — the same degrade-don't-error policy as ``distributed.sharding``.
+    ``axis`` names the single mesh axis ("env" for the rollout paths,
+    "batch" for the serving batch).
+    """
+    avail = len(jax.devices())
+    n = min(num_devices or avail, avail)
+    if divides is not None:
+        while n > 1 and divides % n:
+            n -= 1
+    return make_mesh((n,), (axis,), axis_types=(AxisType.Auto,))
+
+
 def mesh_config(mesh) -> MeshConfig:
     return MeshConfig(tuple(mesh.devices.shape), tuple(mesh.axis_names))
 

@@ -71,7 +71,8 @@ class ClusterEngine:
     def __init__(self, engines: List[ServingEngine],
                  services: Dict[int, object], *, stacked: bool = True,
                  handover_cost: float = 0.4,
-                 ledger: Optional[TransferLedger] = None):
+                 ledger: Optional[TransferLedger] = None,
+                 mesh=None, batch_axis: str = "batch"):
         assert engines, "a cluster needs at least one cell"
         self.engines = engines
         self.services = services
@@ -81,6 +82,16 @@ class ClusterEngine:
         # ids); per-cell ledgers on the engines record intra-cell legs
         self.ledger = ledger
         self.handovers_applied = 0
+        # mesh-sharded fleet: each cell has a home device (round-robin) and
+        # the stacked per-service batch is sharded over the batch axis by
+        # the services themselves (build them with the same mesh).  The
+        # bookkeeping here only adds accounting: a handover between cells
+        # on different home devices moves latents across shards and is
+        # recorded as a "shard" transfer (bytes real, cost 0.0 — the
+        # latency charge already rides the handover event itself).
+        self.mesh = mesh
+        ndev = 1 if mesh is None else mesh.shape[batch_axis]
+        self.device_of_cell = [c % ndev for c in range(len(engines))]
         # scalar fallbacks for services without a batch entry point
         self._block_fns = {
             s: (svc.block_fn if hasattr(svc, "block_fn") else svc)
@@ -129,6 +140,11 @@ class ClusterEngine:
         if self.ledger is not None and self.ledger is not dst.ledger:
             self.ledger.record(self.frame, req.rid, "handover", ev.src_cell,
                                ev.dst_cell, state_nbytes(req.state), cost)
+        src_dev = self.device_of_cell[ev.src_cell]
+        dst_dev = self.device_of_cell[ev.dst_cell]
+        if self.ledger is not None and src_dev != dst_dev:
+            self.ledger.record(self.frame, req.rid, "shard", src_dev,
+                               dst_dev, state_nbytes(req.state), 0.0)
         req.origin = ev.dst_origin               # re-enter at the new PoA
         req.node = -1                            # placement restarts there
         dst.active.append(req)                   # admission carries over
@@ -215,6 +231,7 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
                           handover_cost: float = 0.4,
                           telemetry: Optional[TelemetryLog] = None,
                           ledger: Optional[TransferLedger] = None,
+                          mesh=None, batch_axis: str = "batch",
                           ) -> ClusterEngine:
     """Build a C-cell fleet for one named scenario.
 
@@ -225,6 +242,12 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
     own bridged policy (per-cell :class:`ServingPolicy` instances are
     stateful — histories and PoA streams must not be shared); ``None``
     leaves the engine's default locality-greedy placement.
+
+    ``mesh`` shards the stacked fleet batch across devices: build the
+    shared services with the SAME mesh (``make_gdm_services(mesh=...)``) so
+    their jitted block calls carry the batch-axis shardings; the cluster
+    itself only adds the cell→device map and cross-shard transfer
+    accounting.
     """
     engines = []
     for c in range(num_cells):
@@ -239,7 +262,8 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
                                                 world=world)
         engines.append(engine)
     return ClusterEngine(engines, services, stacked=stacked,
-                         handover_cost=handover_cost, ledger=ledger)
+                         handover_cost=handover_cost, ledger=ledger,
+                         mesh=mesh, batch_axis=batch_axis)
 
 
 def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],

@@ -27,7 +27,11 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-TRANSFER_KINDS = ("uplink", "migration", "handover", "downlink")
+# "shard" records cross-DEVICE latent movement on a mesh-sharded cluster
+# (a handover whose src/dst cells live on different mesh devices): bytes
+# are real, cost is 0.0 — the latency charge already rides the handover
+# event; the extra row keeps the byte accounting honest per device link.
+TRANSFER_KINDS = ("uplink", "migration", "handover", "downlink", "shard")
 
 
 def state_nbytes(state) -> int:

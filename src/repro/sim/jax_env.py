@@ -43,6 +43,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import P, shard_map
 from repro.sim.env import IDLE, PENDING, SimConfig
 
 
@@ -148,18 +149,28 @@ def state_from_numpy(venv, key: Optional[jax.Array] = None) -> EnvState:
     )
 
 
-def reset_env(cfg: SimConfig, world: JaxWorld, key: jax.Array) -> EnvState:
+def reset_env(cfg: SimConfig, world: JaxWorld, key: jax.Array, *,
+              pos_draws: Optional[jax.Array] = None,
+              dest_draws: Optional[jax.Array] = None,
+              req_draws: Optional[jax.Array] = None) -> EnvState:
     """Fresh episode state from a jax key (fused-training reset).
 
     Draw *structure* matches the numpy reset (uniform positions/waypoints,
     request probability 0.9) but streams are jax-native, not numpy-matched —
     cross-engine equivalence starts from :func:`state_from_numpy` instead.
+
+    ``pos_draws`` / ``dest_draws`` ((E, U, 2) in [0, side)) and
+    ``req_draws`` ((E, U) uniforms in [0, 1)) inject the reset randomness —
+    the sharded fused round hoists them so every shard slices one global
+    stream; the key is still split (and stored) identically either way.
     """
     e, u = world.qbar.shape
     fdtype = world.qbar.dtype
     k_pos, k_dest, k_req, key = jax.random.split(key, 4)
-    pos = jax.random.uniform(k_pos, (e, u, 2), fdtype, 0.0, cfg.side)
-    dest = jax.random.uniform(k_dest, (e, u, 2), fdtype, 0.0, cfg.side)
+    pos = pos_draws if pos_draws is not None else \
+        jax.random.uniform(k_pos, (e, u, 2), fdtype, 0.0, cfg.side)
+    dest = dest_draws if dest_draws is not None else \
+        jax.random.uniform(k_dest, (e, u, 2), fdtype, 0.0, cfg.side)
     poa = area_of(cfg, pos)
     zf = jnp.zeros((e, u), fdtype)
     zi = jnp.zeros((e, u), jnp.int32)
@@ -168,7 +179,8 @@ def reset_env(cfg: SimConfig, world: JaxWorld, key: jax.Array) -> EnvState:
         poa=poa, prev_poa=poa,
         blocks_done=zi, chain_state=jnp.full((e, u), IDLE, jnp.int32),
         cur_node=jnp.full((e, u), -1, jnp.int32),
-        has_request=jax.random.uniform(k_req, (e, u), fdtype) < 0.9,
+        has_request=(req_draws if req_draws is not None else
+                     jax.random.uniform(k_req, (e, u), fdtype)) < 0.9,
         uploaded=jnp.zeros((e, u), bool),
         delivered_quality=zf, quality_now=zf,
         total_delivered=jnp.zeros((e,), fdtype),
@@ -176,6 +188,29 @@ def reset_env(cfg: SimConfig, world: JaxWorld, key: jax.Array) -> EnvState:
         num_collisions=jnp.zeros((e,), jnp.int32),
         frame=jnp.asarray(0, jnp.int32), key=key,
     )
+
+
+# -- mesh partition specs -----------------------------------------------------
+
+def state_specs(axis: str) -> EnvState:
+    """:class:`EnvState` pytree of PartitionSpecs: every (E, ...) field is
+    sharded on its leading env dim; the shared episode clock and key are
+    replicated."""
+    sh = P(axis)
+    return EnvState(
+        pos=sh, dest=sh, pause_left=sh, poa=sh, prev_poa=sh,
+        blocks_done=sh, chain_state=sh, cur_node=sh, has_request=sh,
+        uploaded=sh, delivered_quality=sh, quality_now=sh,
+        total_delivered=sh, num_delivered=sh, num_collisions=sh,
+        frame=P(), key=P())
+
+
+def world_specs(axis: str) -> JaxWorld:
+    """:class:`JaxWorld` specs: the (E, ...) Table II stacks shard with the
+    envs; ``y_hat`` (N, N) is the one env-independent table — replicated."""
+    sh = P(axis)
+    return JaxWorld(w_hat=sh, eps=sh, qbar=sh, service_of=sh, omega=sh,
+                    omega_ue=sh, y_hat=P())
 
 
 # -- primitives ---------------------------------------------------------------
@@ -488,7 +523,7 @@ def make_step(cfg: SimConfig, world: JaxWorld):
 
 def build_eval_round(cfg: SimConfig, act_fn, *,
                      mac_scheme: str = "greedy", history: int = 1,
-                     needs_obs: bool = True):
+                     needs_obs: bool = True, mesh=None, axis: str = "env"):
     """Compile one evaluation round — a ``lax.scan`` over the episode running
     MAC → policy act → :func:`env_step` — as a single jitted function.
 
@@ -512,6 +547,14 @@ def build_eval_round(cfg: SimConfig, act_fn, *,
     state's counters.  ``needs_obs=False`` (policies whose ``act_fn``
     ignores observations, e.g. GR) drops the per-frame :func:`observe` and
     the history carry from the scan.
+
+    ``mesh`` (a 1-D device mesh with axis ``axis``, e.g.
+    ``repro.launch.mesh.make_env_mesh``) shards the whole round over the env
+    dim via ``shard_map``: every frame quantity is per-env (no cross-env
+    arithmetic anywhere in :func:`env_step`), so each shard scans its env
+    slice independently and the result is EXACTLY the single-device round —
+    the caller supplies the same host-side ``state0``/``draws`` either way.
+    E must be divisible by the mesh size.
     """
     assert mac_scheme in ("greedy", "random")
 
@@ -556,4 +599,18 @@ def build_eval_round(cfg: SimConfig, act_fn, *,
         }
         return state, stats
 
-    return jax.jit(round_fn)
+    if mesh is None:
+        return jax.jit(round_fn)
+
+    # in_specs pytree prefixes: params replicated (every shard runs the same
+    # policy), world/state per-field, the draws dict uniformly (T, E, ...).
+    # check_vma=False: the replicated frame/key carry through lax.scan trips
+    # the conservative replication checker on older jax; the specs above are
+    # what guarantee replication here.
+    sharded = shard_map(
+        round_fn, mesh=mesh,
+        in_specs=(P(), world_specs(axis), state_specs(axis),
+                  P(None, axis)),
+        out_specs=(state_specs(axis), P(axis)),
+        check_vma=False)
+    return jax.jit(sharded)
