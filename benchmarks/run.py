@@ -55,6 +55,9 @@ BENCHES = {
                 "fleet-scale cluster sweep: cells x workloads x policies "
                 "+ stacked-vs-sequential throughput"),
     "roofline": ("benchmarks.bench_roofline", "dry-run roofline table readout"),
+    "resilience": ("benchmarks.bench_resilience",
+                   "fault-intensity sweep: node churn x policy x recovery "
+                   "mode (drop / failover / failover+degrade)"),
 }
 
 

@@ -10,14 +10,18 @@ The production-shaped pipeline on top of the single-cell closed loop
      cells' block executions into ONE jitted call per service per quantum);
   3. derive a nonstationary fleet workload (diurnal / flash-crowd / mmpp /
      heavy-tail) with cross-cell UE handover candidates;
-  4. serve it, then report fleet latency/quality/objective, the handover
-     ledger, and the per-quantum telemetry summary (optionally dumped as
+  4. serve it — optionally under an injected fault schedule
+     (``--fault-schedule node-churn`` etc.) with failure recovery
+     (``--recovery-mode failover --deadline 16``) — then report fleet
+     latency/quality/objective, the handover ledger, the resilience
+     counters, and the per-quantum telemetry summary (optionally dumped as
      schema-validated JSON).
 
 Run:
   PYTHONPATH=src python examples/serve_fleet.py --scenario paper-fig3 \\
       --cells 4 --workload diurnal --handover-rate 0.05 \\
-      --telemetry-out fleet_telemetry.json
+      --fault-schedule node-churn --recovery-mode failover+degrade \\
+      --deadline 16 --telemetry-out fleet_telemetry.json
 """
 import argparse
 import json
@@ -27,9 +31,10 @@ import jax
 
 from repro.core.policy import GreedyPoAPolicy, LearnedPolicy
 from repro.experiments import train_variant
-from repro.serving import TelemetryLog, TransferLedger
+from repro.serving import RecoveryConfig, TelemetryLog, TransferLedger
 from repro.serving.cluster import cluster_from_scenario, serve_fleet
 from repro.serving.gdm_service import make_gdm_services
+from repro.sim.faults import fault_names, fault_trace
 from repro.sim.scenarios import get_scenario, scenario_names
 from repro.sim.workloads import fleet_trace, workload_names
 
@@ -52,6 +57,13 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--telemetry-out", default="",
                     help="write the schema-validated telemetry JSON here")
+    ap.add_argument("--fault-schedule", default="none",
+                    help=f"one of {fault_names()}")
+    ap.add_argument("--recovery-mode", default="failover",
+                    choices=["drop", "failover", "failover+degrade"],
+                    help="what happens to in-flight requests on dead nodes")
+    ap.add_argument("--deadline", type=int, default=0,
+                    help="per-request deadline in quanta (0 = none)")
     args = ap.parse_args(argv)
 
     cfg = get_scenario(args.scenario)
@@ -75,16 +87,29 @@ def main(argv=None):
           f"({frames} quanta, handover rate {args.handover_rate})")
     telemetry = TelemetryLog()
     ledger = TransferLedger()
+    recovery = None
+    faults = None
+    if args.fault_schedule != "none":
+        recovery = RecoveryConfig(
+            mode="drop" if args.recovery_mode == "drop" else "failover",
+            deadline_frames=args.deadline,
+            degrade=(args.recovery_mode == "failover+degrade"))
+        faults = fault_trace(cfg, frames, args.cells, args.fault_schedule,
+                             seed=args.seed)
+        print(f"  injecting {args.fault_schedule!r} faults "
+              f"(recovery {args.recovery_mode!r}, deadline "
+              f"{args.deadline or 'none'})")
     cluster = cluster_from_scenario(
         cfg, args.cells, services, policy_factory=factory,
-        telemetry=telemetry, ledger=ledger)
+        telemetry=telemetry, ledger=ledger, recovery=recovery)
     fleet = fleet_trace(cfg, frames, args.cells, workload=args.workload,
                         seed=args.seed, handover_rate=args.handover_rate)
 
     print("[3/3] serving the fleet (stacked execution: one jitted block "
           "call per service per quantum, fleet-wide)")
     t0 = time.time()
-    stats = serve_fleet(cluster, fleet, services, seed=args.seed)
+    stats = serve_fleet(cluster, fleet, services, seed=args.seed,
+                        faults=faults)
     wall = time.time() - t0
 
     print(f"\nfleet: {stats['completed']}/{stats['submitted']} completed "
@@ -96,6 +121,13 @@ def main(argv=None):
           f"objective {stats['objective']:.2f}")
     print(f"  handovers {stats['handovers']} "
           f"(cost {stats['handover_cost']:.2f})")
+    if faults is not None:
+        fo = ledger.totals()["failover"]
+        print(f"  resilience: goodput {stats['goodput']} "
+              f"drops {stats['drops']} retries {stats['retries']} "
+              f"deadline misses {stats['deadline_misses']} "
+              f"failovers {stats['failovers']} "
+              f"({fo['nbytes']} failover bytes, cost {fo['cost']:.2f})")
     for c, cell in enumerate(stats["per_cell"]):
         print(f"  cell {c}: {cell['completed']} completed, "
               f"lat {cell['mean_latency_frames']:.1f}f, "

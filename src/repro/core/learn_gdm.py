@@ -71,6 +71,12 @@ def variant_action_mask_vec(venv: VecEdgeSimulator, variant: str) -> np.ndarray:
         mid_chain = (venv.blocks_done > 0) & \
             (venv.blocks_done < cfg.max_blocks)
         mask[..., 0][mid_chain] = False             # no early exit
+    # duck-typed fault hook: a view carrying (E, N) node liveness (the
+    # serving bridge's _SlotView under injected failures) masks placements
+    # onto dead nodes for every variant; sim envs don't have the attribute
+    up = getattr(venv, "node_up", None)
+    if up is not None:
+        mask[..., 1:] &= np.asarray(up, dtype=bool)[:, None, :]
     return mask
 
 

@@ -152,7 +152,10 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
                        workload: str = "stationary", seed: int = 0,
                        handover_rate: float = 0.0, stacked: bool = True,
                        early_exit: bool = True, telemetry=None,
-                       ledger=None, workload_params: Optional[Dict] = None):
+                       ledger=None, workload_params: Optional[Dict] = None,
+                       fault_schedule: str = "none",
+                       fault_params: Optional[Dict] = None,
+                       recovery=None):
     """Deploy policies on a C-cell fleet for one scenario × workload.
 
     ``policy_factory(cell) -> Policy`` builds each cell's placement policy
@@ -163,18 +166,28 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
     :func:`repro.sim.workloads.fleet_trace`, and serves the whole fleet
     under one clock.  Returns the fleet summary (per-cell summaries under
     ``"per_cell"``).
+
+    ``fault_schedule`` names a :mod:`repro.sim.faults` schedule injected
+    over the run (``"none"``: no fault state is ever fed — the exact
+    pre-fault driver); ``recovery`` is the per-cell
+    :class:`repro.serving.engine.RecoveryConfig`.
     """
     from repro.serving.cluster import cluster_from_scenario, serve_fleet
+    from repro.sim.faults import fault_trace
     from repro.sim.workloads import fleet_trace
 
     cluster = cluster_from_scenario(
         cfg, cells, services, policy_factory=policy_factory,
         early_exit=early_exit, stacked=stacked, telemetry=telemetry,
-        ledger=ledger)
+        ledger=ledger, recovery=recovery)
     fleet = fleet_trace(cfg, frames, cells, workload=workload, seed=seed,
                         handover_rate=handover_rate,
                         **(workload_params or {}))
-    return serve_fleet(cluster, fleet, services, seed=seed)
+    faults = None
+    if fault_schedule != "none":
+        faults = fault_trace(cfg, frames, cells, fault_schedule, seed=seed,
+                             **(fault_params or {}))
+    return serve_fleet(cluster, fleet, services, seed=seed, faults=faults)
 
 
 def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
@@ -184,10 +197,14 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                         engine: Optional[str] = None,
                         num_envs: Optional[int] = None,
                         services: Optional[Dict[int, object]] = None,
-                        workload_params: Optional[Dict] = None):
+                        workload_params: Optional[Dict] = None,
+                        fault_schedule: str = "none",
+                        fault_params: Optional[Dict] = None,
+                        recovery=None):
     """The closed loop at fleet scale: sim-train ONE placement variant
     against the measured Ω curves, then deploy it to every cell of a
-    C-cell cluster and serve the fleet workload."""
+    C-cell cluster and serve the fleet workload (optionally under an
+    injected fault schedule + recovery policy)."""
     from repro.core.policy import LearnedPolicy
     if services is None:
         import jax
@@ -203,7 +220,9 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
     stats = serve_fleet_policy(
         cfg, lambda c: LearnedPolicy(ctrl.agent, variant), frames,
         cells=cells, services=services, workload=workload, seed=seed,
-        handover_rate=handover_rate, workload_params=workload_params)
+        handover_rate=handover_rate, workload_params=workload_params,
+        fault_schedule=fault_schedule, fault_params=fault_params,
+        recovery=recovery)
     stats["train_episodes"] = train_eps
     return stats
 

@@ -8,6 +8,7 @@ from repro.serving.engine import (  # noqa: F401
     EngineConfig,
     NodeExecutor,
     NodeSpec,
+    RecoveryConfig,
     Request,
     ServingEngine,
     apply_block_results,
@@ -25,6 +26,7 @@ from repro.serving.policy_bridge import (  # noqa: F401
     serve_trace,
 )
 from repro.serving.telemetry import (  # noqa: F401
+    SCHEMA_VERSION,
     TELEMETRY_SCHEMA,
     QuantumEvent,
     TelemetryLog,

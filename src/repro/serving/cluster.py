@@ -108,6 +108,18 @@ class ClusterEngine:
     def submit(self, cell: int, req: Request) -> None:
         self.engines[cell].submit(req)
 
+    # -- faults ----------------------------------------------------------------
+
+    def apply_faults(self, faults, t: int) -> None:
+        """Feed frame ``t`` of a :class:`repro.sim.faults.FaultTrace` to
+        every cell (before handovers/arrivals, so the whole quantum sees
+        it).  A ``"none"`` trace leaves every engine's fault state inert —
+        the zero-fault pin."""
+        for c, eng in enumerate(self.engines):
+            node_up, cap_scale, link_scale = faults.cell_state(t, c)
+            eng.set_fault_state(node_up, cap_scale=cap_scale,
+                                link_scale=link_scale)
+
     # -- handover --------------------------------------------------------------
 
     def apply_handovers(self, events: Sequence[HandoverEvent]
@@ -128,6 +140,12 @@ class ClusterEngine:
         busy = any(r.ue == ev.ue for r in dst.active) or \
             any(r.ue == ev.ue for r in dst.pending)
         if busy:                                 # destination slot occupied
+            return False
+        # a whole-cell outage at the destination defers the move: the
+        # request stays in the source cell rather than strand its latents
+        # in a cell that cannot execute anything (guarded on _fault_active
+        # so the zero-fault path never evaluates it)
+        if dst._fault_active and not dst._node_up.any():
             return False
         src.active.remove(req)
         # ship the live latents: charged through the destination engine's
@@ -215,6 +233,13 @@ class ClusterEngine:
             "objective": float(sum(c["objective"] for c in per_cell)),
             "handovers": self.handovers_applied,
             "handover_cost": float(sum(r.handover_cost for r in done)),
+            # fleet resilience totals (all zero on a healthy run)
+            "goodput": int(sum(c["goodput"] for c in per_cell)),
+            "drops": int(sum(c["drops"] for c in per_cell)),
+            "retries": int(sum(c["retries"] for c in per_cell)),
+            "deadline_misses": int(sum(c["deadline_misses"]
+                                       for c in per_cell)),
+            "failovers": int(sum(c["failovers"] for c in per_cell)),
             "per_cell": per_cell,
         }
 
@@ -232,7 +257,7 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
                           telemetry: Optional[TelemetryLog] = None,
                           ledger: Optional[TransferLedger] = None,
                           mesh=None, batch_axis: str = "batch",
-                          ) -> ClusterEngine:
+                          recovery=None) -> ClusterEngine:
     """Build a C-cell fleet for one named scenario.
 
     Every cell replicates the scenario's Table II world (same nodes, same
@@ -248,12 +273,16 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
     their jitted block calls carry the batch-axis shardings; the cluster
     itself only adds the cell→device map and cross-shard transfer
     accounting.
+
+    ``recovery`` (a :class:`repro.serving.engine.RecoveryConfig`) arms
+    every cell's failure-recovery machinery; ``None`` (the default) keeps
+    the pre-fault behaviour exactly.
     """
     engines = []
     for c in range(num_cells):
         engine, world = engine_from_scenario(
             cfg, services, engine_cfg=engine_cfg, world=world,
-            early_exit=early_exit)
+            early_exit=early_exit, recovery=recovery)
         engine.cell_id = c
         engine.telemetry = telemetry
         engine.ledger = ledger
@@ -267,16 +296,18 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
 
 
 def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
-                *, seed: int = 0, collect_steps: bool = False
-                ) -> Dict[str, object]:
+                *, seed: int = 0, collect_steps: bool = False,
+                faults=None) -> Dict[str, object]:
     """Drive a :class:`repro.sim.workloads.FleetTrace` through a fleet.
 
-    Per frame and per cell: feed the PoA stream (admission + downlink +
-    bridge observation), apply the frame's feasible handover candidates,
-    submit idle-gated arrivals (the single-cell ``serve_trace`` semantics,
-    with fleet-unique request ids), then run ONE cluster quantum.  Returns
-    the fleet summary plus submission counts (and the per-frame per-cell
-    step stats when ``collect_steps`` — the cell-equivalence harness reads
+    Per frame and per cell: feed the frame's fault state (``faults``, a
+    :class:`repro.sim.faults.FaultTrace` — omitted or ``"none"`` leaves the
+    engines untouched), feed the PoA stream (admission + downlink + bridge
+    observation), apply the frame's feasible handover candidates, submit
+    idle-gated arrivals (the single-cell ``serve_trace`` semantics, with
+    fleet-unique request ids), then run ONE cluster quantum.  Returns the
+    fleet summary plus submission counts (and the per-frame per-cell step
+    stats when ``collect_steps`` — the cell-equivalence harness reads
     those).
     """
     cfg = fleet.cfg
@@ -284,9 +315,16 @@ def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
     c_n = cluster.num_cells
     assert len(fleet.cells) == c_n, \
         f"fleet trace has {len(fleet.cells)} cells, cluster has {c_n}"
+    if faults is not None:
+        assert faults.num_cells == c_n, \
+            f"fault trace has {faults.num_cells} cells, cluster has {c_n}"
+        assert faults.frames >= fleet.frames, \
+            f"fault trace covers {faults.frames} frames, fleet needs " \
+            f"{fleet.frames}"
     rngs = [np.random.default_rng((seed, c)) for c in range(c_n)]
     outstanding = np.zeros((c_n, u), dtype=bool)
     cursors = [0] * c_n
+    fail_cursors = [0] * c_n
     rid = 0
     steps: List[List[Dict[str, float]]] = []
     by_frame: Dict[int, List] = {}
@@ -294,6 +332,8 @@ def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
         by_frame.setdefault(int(frame), []).append((int(ue), int(src),
                                                     int(dst)))
     for t in range(fleet.frames):
+        if faults is not None:
+            cluster.apply_faults(faults, t)
         for c, eng in enumerate(cluster.engines):
             eng.set_poa(fleet.cells[c].poa[t])
             update_poa = getattr(eng.placement_fn, "update_poa", None)
@@ -318,6 +358,12 @@ def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
                 if req.ue >= 0:
                     outstanding[c, req.ue] = False
             cursors[c] = len(eng.completed)
+            # terminal failures free the UE slot too — otherwise a single
+            # drop would silence that UE's traffic for the rest of the run
+            for req in eng.failed[fail_cursors[c]:]:
+                if req.ue >= 0:
+                    outstanding[c, req.ue] = False
+            fail_cursors[c] = len(eng.failed)
     out = cluster.summary(fleet.frames)
     out["submitted"] = rid
     out["satisfied"] = sum(r.quality >= r.quality_threshold

@@ -55,6 +55,20 @@ class Request:
     migration_cost: float = 0.0
     handover_cost: float = 0.0
     downlink_cost: float = 0.0
+    # resilience (all inert at their defaults; see RecoveryConfig):
+    # absolute deadline frame (-1 = none), terminal outcome ("completed" /
+    # "deadline-shed" / "drop"), admission-retry backoff state, and the
+    # failover trail — the dead node a latent is being re-placed from plus
+    # its cumulative failover leg charge
+    deadline: int = -1
+    outcome: str = ""
+    retries: int = 0
+    next_retry_frame: int = 0
+    failover_from: int = -1
+    failovers: int = 0
+    failover_cost: float = 0.0
+    # effective chain cap after graceful degradation (-1 = full chain)
+    degraded_to: int = -1
 
 
 def apply_block_results(reqs: List[Request], states: List[Any],
@@ -133,6 +147,44 @@ class EngineConfig:
     seed: int = 0
 
 
+@dataclasses.dataclass
+class RecoveryConfig:
+    """Failure-recovery policy for an engine (opt-in: an engine built
+    without one behaves exactly like the pre-fault engine, faults or not).
+
+    ``mode``:
+
+    * ``"drop"``     — an in-flight request on a failed node is final-dropped
+      (the drop-only baseline ``benchmarks/bench_resilience.py`` measures
+      against);
+    * ``"failover"`` — the latent is re-placed from the last completed
+      block onto a surviving node, charged as a ``"failover"`` transfer leg.
+
+    ``deadline_frames`` (> 0) stamps every submitted request with an
+    absolute deadline ``arrival_frame + deadline_frames``; requests that
+    can no longer deliver in time are shed (outcome ``"deadline-shed"``)
+    instead of burning blocks.  Admission-denied requests retry under
+    capped exponential backoff (``base * 2**retries`` quanta, capped) —
+    with ``base=1`` the first retry lands the next quantum, exactly the
+    pre-backoff cadence.  ``degrade=True`` turns on the graceful-degradation
+    controller: under failure- or backpressure-induced load (demand /
+    surviving capacity above ``degrade_pressure``) the remaining chain
+    length of deadline-carrying requests is cut (the paper's step-reduction
+    knob), converting quality margin into deadline compliance.
+    """
+    mode: str = "failover"           # "drop" | "failover"
+    deadline_frames: int = 0         # relative deadline at submit; 0 = none
+    retry_backoff_base: int = 1      # quanta before retry k is 2**k * base
+    retry_backoff_cap: int = 8       # max backoff delay in quanta
+    degrade: bool = False
+    degrade_pressure: float = 1.0    # demand/capacity ratio arming the cut
+
+    def __post_init__(self):
+        assert self.mode in ("drop", "failover"), \
+            f"unknown recovery mode {self.mode!r}"
+        assert self.retry_backoff_base >= 1 and self.retry_backoff_cap >= 1
+
+
 class ServingEngine:
     """Continuous-batching chain scheduler over heterogeneous nodes.
 
@@ -154,7 +206,8 @@ class ServingEngine:
                  trans_cost: np.ndarray,
                  placement_fn: Optional[Callable] = None, *,
                  cell_id: int = 0, ledger: Optional[TransferLedger] = None,
-                 telemetry: Optional[TelemetryLog] = None):
+                 telemetry: Optional[TelemetryLog] = None,
+                 recovery: Optional[RecoveryConfig] = None):
         self.nodes = nodes
         self.cfg = cfg
         self.y_hat = trans_cost                     # (N, N) node-to-node cost
@@ -176,14 +229,77 @@ class ServingEngine:
         # C9 costs charged THIS quantum (reset after the telemetry event);
         # the cluster adds cross-cell handover charges here too
         self._legs_quantum = {"uplink": 0.0, "migration": 0.0,
-                              "handover": 0.0, "downlink": 0.0}
+                              "handover": 0.0, "downlink": 0.0,
+                              "failover": 0.0}
         self._quantum: Optional[tuple] = None       # begin_step scratch
+        # -- fault state (fed per quantum via set_fault_state; the healthy
+        # defaults keep EVERY fault/recovery branch below strictly inert, so
+        # the zero-fault path is frame-for-frame the pre-fault engine)
+        self.recovery = recovery
+        n = len(nodes)
+        self._spec_caps = np.asarray([x.spec.capacity for x in nodes])
+        self._node_up = np.ones(n, dtype=bool)
+        self._caps_q = self._spec_caps              # this quantum's effective
+        self._link_scale: Dict[str, float] = {}
+        self._fault_active = False
+        # terminal failures + lifetime counters (surfaced by summary())
+        self.failed: List[Request] = []
+        self.failovers_total = 0
+        self.retries_total = 0
+        self.deadline_misses_total = 0
+        self.drops_total = 0
+        # per-quantum counters for the telemetry event
+        self._q_failovers = 0
+        self._q_retries = 0
+        self._q_deadline_misses = 0
+        self._q_drops = 0
 
     # -- request lifecycle -----------------------------------------------------
 
     def submit(self, req: Request) -> None:
         req.arrival_frame = self.frame
+        if self.recovery is not None and self.recovery.deadline_frames > 0 \
+                and req.deadline < 0:
+            req.deadline = self.frame + self.recovery.deadline_frames
         self.pending.append(req)
+
+    def set_fault_state(self, node_up=None, *, cap_scale=None,
+                        link_scale=None) -> None:
+        """Feed this quantum's fault state (one row of a
+        :class:`repro.sim.faults.FaultTrace`, via ``cell_state``).
+
+        ``node_up``: (N,) bool — dead nodes are masked out of placement and
+        admission, and their in-flight requests fail over or drop per the
+        engine's :class:`RecoveryConfig`.  ``cap_scale``: (N,) straggler
+        capacity multipliers in (0, 1].  ``link_scale``: per-leg cost
+        multipliers — a mapping, or an array in
+        :data:`repro.sim.faults.FAULT_LEGS` order.  All-healthy input makes
+        every fault branch a no-op (the zero-fault pin)."""
+        n = len(self.nodes)
+        self._node_up = np.ones(n, dtype=bool) if node_up is None \
+            else np.asarray(node_up, dtype=bool).copy()
+        assert self._node_up.shape == (n,)
+        caps = self._spec_caps
+        if cap_scale is not None:
+            scale = np.asarray(cap_scale, dtype=float)
+            assert scale.shape == (n,)
+            if (scale != 1.0).any():
+                # a straggler still makes progress: ceil keeps >= 1 block
+                caps = np.ceil(caps * scale).astype(int)
+        self._caps_q = np.where(self._node_up, caps, 0)
+        if link_scale is None:
+            self._link_scale = {}
+        elif isinstance(link_scale, dict):
+            self._link_scale = {k: float(v) for k, v in link_scale.items()
+                                if float(v) != 1.0}
+        else:
+            from repro.sim.faults import FAULT_LEGS
+            self._link_scale = {
+                leg: float(s) for leg, s in zip(FAULT_LEGS, link_scale)
+                if float(s) != 1.0}
+        self._fault_active = (not self._node_up.all()
+                              or caps is not self._spec_caps
+                              or bool(self._link_scale))
 
     def set_poa(self, poa: np.ndarray) -> None:
         """Feed the UEs' current PoAs (the trace's mobility stream).  Used
@@ -201,6 +317,8 @@ class ServingEngine:
     def _charge(self, req: Request, kind: str, src: int, dst: int,
                 cost: float) -> None:
         """Charge one C9 transmission leg + record it in the ledger."""
+        if self._fault_active and kind in self._link_scale:
+            cost = cost * self._link_scale[kind]    # degraded link
         req.trans_cost += cost
         setattr(req, f"{kind}_cost", getattr(req, f"{kind}_cost") + cost)
         self._legs_quantum[kind] += cost
@@ -223,18 +341,37 @@ class ServingEngine:
         per NODE — matching the sim's per-BS MAC (each UE competes for the C
         uplink channels of ITS current cell), not the former top C·N global
         cut.  A pending request enters at its UE's current PoA
-        (``set_poa`` stream) or, without one, at its arrival origin."""
+        (``set_poa`` stream) or, without one, at its arrival origin.
+
+        With a :class:`RecoveryConfig`, denied requests retry under capped
+        exponential backoff (a request backing off skips the competition
+        entirely) and a dead entry node denies its whole queue for the
+        quantum; without one the pre-fault cadence is untouched."""
         self._last_admitted = 0
         self._last_dropped = 0
         if not self.pending:
             return
+        rec = self.recovery
         slots = self.cfg.admission_slots
         candidates = sorted(self.pending, key=self._priority, reverse=True)
         taken = set()
         node_taken = np.zeros(len(self.nodes), dtype=int)
         for req in candidates:
+            if rec is not None and req.next_retry_frame > self.frame:
+                continue                             # still backing off
+            if rec is not None and req.retries > 0:
+                self.retries_total += 1              # one retry attempt
+                self._q_retries += 1
             entry = self._entry_node(req)
-            if node_taken[entry] >= slots:
+            denied = (self._fault_active and not self._node_up[entry]) \
+                or node_taken[entry] >= slots
+            if denied:
+                if rec is not None:
+                    delay = min(rec.retry_backoff_cap,
+                                rec.retry_backoff_base
+                                << min(req.retries, 16))
+                    req.next_retry_frame = self.frame + delay
+                    req.retries += 1
                 continue
             node_taken[entry] += 1
             req.admitted = True
@@ -247,7 +384,8 @@ class ServingEngine:
         # a request counts as an admission drop ONCE (its first denied
         # quantum) — re-counting the whole backlog every quantum would let
         # summed telemetry drops exceed total submissions; keyed by rid
-        # (stable across the request's lifetime, unlike id())
+        # (stable across the request's lifetime, unlike id()), pruned on
+        # completion/final-drop so a recycled rid is counted again
         for r in self.pending:
             if r.rid not in self._denied_once:
                 self._denied_once.add(r.rid)
@@ -256,11 +394,102 @@ class ServingEngine:
     def _default_placement(self, req: Request, loads: np.ndarray) -> int:
         """Capacity-aware locality-greedy placement (non-learned default):
         stay at the current node (or the UE's current PoA before the first
-        block), spilling to the nearest unsaturated node."""
-        src = req.node if req.node >= 0 else self._entry_node(req)
-        order = np.argsort(self.y_hat[src]
-                           + 10.0 * (loads >= [n.spec.capacity for n in self.nodes]))
+        block), spilling to the nearest unsaturated node.  Dead nodes are
+        masked out entirely (the fault-state analogue of the bridged
+        policy's action mask)."""
+        src = req.failover_from if req.failover_from >= 0 else (
+            req.node if req.node >= 0 else self._entry_node(req))
+        rank = self.y_hat[src] + 10.0 * (loads >= self._caps_q)
+        if self._fault_active:
+            rank = rank + 1e9 * ~self._node_up
+        order = np.argsort(rank)
         return int(order[0])
+
+    # -- failure handling (all no-ops while the fault state is healthy) --------
+
+    def _finalize_failure(self, req: Request, outcome: str) -> None:
+        """Terminal non-delivery: every submitted rid ends exactly once in
+        {completed, deadline-shed, drop} — the conservation invariant the
+        resilience tests pin."""
+        req.done = True
+        req.outcome = outcome
+        self.failed.append(req)
+        self._denied_once.discard(req.rid)
+        if outcome == "drop":
+            self.drops_total += 1
+            self._q_drops += 1
+        else:
+            self.deadline_misses_total += 1
+            self._q_deadline_misses += 1
+
+    def _handle_node_failures(self) -> None:
+        """In-flight requests on a dead node: final-drop (mode "drop") or
+        mark for failover — the latent survives from the last completed
+        block and placement re-runs it onto a surviving node, charged as a
+        "failover" leg when placed."""
+        if self.recovery is None or self._node_up.all():
+            return
+        dead = [r for r in self.active
+                if r.node >= 0 and not self._node_up[r.node]]
+        for req in dead:
+            if self.recovery.mode == "drop":
+                self.active.remove(req)
+                self._finalize_failure(req, "drop")
+            else:
+                req.failover_from = req.node
+                req.node = -1                        # placement restarts
+
+    def _shed_deadlines(self) -> None:
+        """Shed hopeless requests: past-deadline work (pending or active)
+        can no longer contribute to goodput, so it stops consuming blocks
+        and admission slots."""
+        if self.recovery is None:
+            return
+        late_active = [r for r in self.active
+                       if 0 <= r.deadline < self.frame]
+        for req in late_active:
+            self.active.remove(req)
+            self._finalize_failure(req, "deadline-shed")
+        if any(0 <= r.deadline < self.frame for r in self.pending):
+            keep: deque = deque()
+            for req in self.pending:
+                if 0 <= req.deadline < self.frame:
+                    self._finalize_failure(req, "deadline-shed")
+                else:
+                    keep.append(req)
+            self.pending = keep
+
+    def _block_limit(self, req: Request) -> int:
+        return req.degraded_to if 0 <= req.degraded_to < self.cfg.max_blocks \
+            else self.cfg.max_blocks
+
+    def _degrade(self) -> None:
+        """Graceful degradation: under failure- or backpressure-induced
+        load, cut the remaining chain length of deadline-carrying requests
+        (the paper's step-reduction knob) so quality margin converts into
+        deadline compliance.  The per-request budget is the quanta left
+        before its deadline, shrunk by the demand/capacity pressure ratio
+        when the surviving fleet is oversubscribed."""
+        rec = self.recovery
+        if rec is None or not rec.degrade:
+            return
+        live = [r for r in self.active if not r.done]
+        demand = len(live) + len(self.pending)
+        capacity = int(self._caps_q.sum())
+        pressure = demand / max(capacity, 1)
+        squeeze = pressure > rec.degrade_pressure
+        for req in live:
+            if req.deadline < 0:
+                continue
+            remaining = req.deadline - self.frame + 1   # quanta incl. now
+            if remaining <= 0:
+                continue                                # shed path owns it
+            budget = int(np.ceil(remaining / pressure)) if squeeze \
+                else remaining
+            if budget < self.cfg.max_blocks - req.blocks_done:
+                req.degraded_to = req.blocks_done + max(budget, 1)
+            else:
+                req.degraded_to = -1                    # pressure receded
 
     # -- one scheduling quantum (paper time frame) -------------------------------
 
@@ -270,7 +499,13 @@ class ServingEngine:
         requests`` execution plan; the caller (``step`` or the cluster's
         stacked executor) advances every planned request by one block and
         then calls :meth:`end_step`."""
+        # resilience pre-passes — strict no-ops for a healthy fault state
+        # and/or no RecoveryConfig, keeping the zero-fault path
+        # frame-for-frame identical to the pre-fault engine
+        self._shed_deadlines()
+        self._handle_node_failures()
         self._admit()
+        self._degrade()
         # policy-driven placement hook: a placement_fn exposing
         # ``begin_quantum`` (the ServingPolicy bridge) computes one batched
         # decision for every request slot from the quantum-start state; the
@@ -288,7 +523,7 @@ class ServingEngine:
         for req in order:
             if req.done:
                 continue
-            if req.blocks_done >= self.cfg.max_blocks:
+            if req.blocks_done >= self._block_limit(req):
                 delivered.append(req)
                 continue
             if self.cfg.early_exit and req.blocks_done > 0 and \
@@ -300,8 +535,9 @@ class ServingEngine:
                 if self.cfg.early_exit and req.blocks_done > 0:
                     delivered.append(req)
                 continue
-            node = self.nodes[target]
-            if loads[target] >= node.spec.capacity:
+            if self._fault_active and not self._node_up[target]:
+                continue                             # dead node: wait + retry
+            if loads[target] >= self._caps_q[target]:
                 if req.blocks_done > 0 and self.cfg.early_exit:
                     delivered.append(req)            # deliver what exists
                 continue
@@ -311,13 +547,23 @@ class ServingEngine:
             # cur_node  rule.  _entry_node follows the set_poa stream (a UE
             # that moved while queued uplinks from where it IS), falling
             # back to the arrival origin without one — consistent with
-            # per-node admission and the downlink leg.
-            src = req.node if req.node >= 0 else self._entry_node(req)
-            if src != target:
+            # per-node admission and the downlink leg.  A request failing
+            # over re-places its last-completed-block latent FROM the dead
+            # node, charged as the dedicated "failover" leg.
+            fo = req.failover_from
+            src = fo if fo >= 0 else (
+                req.node if req.node >= 0 else self._entry_node(req))
+            if src != target or fo >= 0:
                 cost = float(self.y_hat[src, target])
-                self._charge(req, "migration" if req.node >= 0 else "uplink",
-                             src, target, cost)
+                kind = "failover" if fo >= 0 else (
+                    "migration" if req.node >= 0 else "uplink")
+                self._charge(req, kind, src, target, cost)
                 trans_cost += cost
+            if fo >= 0:
+                req.failover_from = -1
+                req.failovers += 1
+                self.failovers_total += 1
+                self._q_failovers += 1
             loads[target] += 1
             req.node = target
             assigned.setdefault(target, []).append(req)
@@ -335,7 +581,7 @@ class ServingEngine:
         for target, reqs in assigned.items():
             exec_cost += self.nodes[target].spec.exec_cost * len(reqs)
             for req in reqs:
-                if req.blocks_done >= self.cfg.max_blocks or (
+                if req.blocks_done >= self._block_limit(req) or (
                         self.cfg.early_exit
                         and req.quality >= req.quality_threshold):
                     delivered.append(req)
@@ -351,9 +597,14 @@ class ServingEngine:
                     self._charge(req, "downlink", req.node, dst, cost)
                 trans_cost += cost
             req.done = True
+            req.outcome = "completed"
             req.delivered_frame = self.frame
             self.active.remove(req)
             self.completed.append(req)
+            # prune the denied-once set: a long-running engine must not
+            # leak an entry per rid, and a recycled rid must be counted
+            # as a fresh admission drop
+            self._denied_once.discard(req.rid)
 
         if self.telemetry is not None:
             # every leg is what was CHARGED this quantum (uplink/migration
@@ -367,9 +618,16 @@ class ServingEngine:
                 delivered=len(delivered),
                 node_load=[int(x) for x in loads],
                 node_capacity=[n.spec.capacity for n in self.nodes],
-                legs={"compute": exec_cost, **self._legs_quantum}))
+                legs={"compute": exec_cost, **self._legs_quantum},
+                node_down=int((~self._node_up).sum())
+                if self._fault_active else 0,
+                failovers=self._q_failovers, retries=self._q_retries,
+                deadline_misses=self._q_deadline_misses,
+                final_drops=self._q_drops))
         self._last_dropped = 0
         self._legs_quantum = {k: 0.0 for k in self._legs_quantum}
+        self._q_failovers = self._q_retries = 0
+        self._q_deadline_misses = self._q_drops = 0
 
         self.prev_loads = loads
         self.frame += 1
@@ -400,6 +658,11 @@ class ServingEngine:
         lat = [r.delivered_frame - r.arrival_frame + 1 for r in done]
         return {
             "completed": len(done),
+            # completions that landed within their deadline (deadline-free
+            # requests always count) — the resilience bench's headline metric
+            "goodput": sum(1 for r in done
+                           if r.deadline < 0
+                           or r.delivered_frame <= r.deadline),
             "mean_quality": float(np.mean([r.quality for r in done]))
             if done else 0.0,
             "mean_latency_frames": float(np.mean(lat)) if lat else 0.0,
@@ -417,8 +680,14 @@ class ServingEngine:
                                    ("compute", "exec_cost"),
                                    ("migration", "migration_cost"),
                                    ("handover", "handover_cost"),
-                                   ("downlink", "downlink_cost"))
+                                   ("downlink", "downlink_cost"),
+                                   ("failover", "failover_cost"))
             },
+            # lifetime resilience totals (all zero on a healthy run)
+            "drops": self.drops_total,
+            "retries": self.retries_total,
+            "deadline_misses": self.deadline_misses_total,
+            "failovers": self.failovers_total,
             "frames": frames,
         }
 

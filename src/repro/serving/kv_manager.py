@@ -31,7 +31,11 @@ import numpy as np
 # (a handover whose src/dst cells live on different mesh devices): bytes
 # are real, cost is 0.0 — the latency charge already rides the handover
 # event; the extra row keeps the byte accounting honest per device link.
-TRANSFER_KINDS = ("uplink", "migration", "handover", "downlink", "shard")
+# "failover" is a migration forced by node failure: the latent re-places
+# from the dead node (last completed block) onto a survivor — same byte
+# math as "migration", separate kind so resilience cost is decomposable.
+TRANSFER_KINDS = ("uplink", "migration", "handover", "downlink", "shard",
+                  "failover")
 
 
 def state_nbytes(state) -> int:

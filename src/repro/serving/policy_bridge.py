@@ -54,6 +54,9 @@ class _SlotView:
     poa: np.ndarray                  # (1, U)
     cur_node: np.ndarray             # (1, U)
     blocks_done: np.ndarray          # (1, U)
+    # (1, N) node liveness, or None when every node is up — the action-mask
+    # hook (variant_action_mask_vec) masks placements onto dead nodes
+    node_up: Optional[np.ndarray] = None
 
 
 class ServingPolicy:
@@ -141,8 +144,13 @@ class ServingPolicy:
             self.history.append(obs)
             obs_hist = obs_history_window(self.history, self.policy.history)
 
+        # surface the engine's fault state to the policy's action mask; None
+        # while healthy keeps the zero-fault observation/mask path untouched
+        up = engine._node_up
         view = _SlotView(cfg, 1, chain[None], poa[None], cur_node[None],
-                         blocks[None])
+                         blocks[None],
+                         node_up=up[None] if engine._fault_active
+                         and not up.all() else None)
         self._actions = np.asarray(
             self.policy.act_batch(view, obs_hist))[0].astype(int)
         if self.record:
@@ -160,7 +168,7 @@ class ServingPolicy:
 def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
                          engine_cfg: Optional[EngineConfig] = None,
                          world: Optional[Dict[str, np.ndarray]] = None,
-                         early_exit: bool = True):
+                         early_exit: bool = True, recovery=None):
     """Build the ServingEngine matching a sim scenario's world.
 
     Nodes replicate the Table II world draw (one node per BS, capacity
@@ -186,7 +194,8 @@ def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
     ecfg = engine_cfg or EngineConfig(
         max_blocks=cfg.max_blocks, admission_slots=cfg.num_channels,
         alpha=cfg.alpha, beta=cfg.beta, early_exit=early_exit, seed=cfg.seed)
-    return ServingEngine(nodes, ecfg, grid_trans_cost(cfg)), world
+    return ServingEngine(nodes, ecfg, grid_trans_cost(cfg),
+                         recovery=recovery), world
 
 
 def submit_arrivals(engine: ServingEngine, trace, t: int,
@@ -229,6 +238,7 @@ def serve_trace(engine: ServingEngine, trace, services: Dict[int, object], *,
     rng = np.random.default_rng(seed)
     outstanding = np.zeros(u, dtype=bool)
     completed_cursor = 0
+    failed_cursor = 0
     rid = 0
     update_poa = getattr(engine.placement_fn, "update_poa", None)
     for t in range(trace.frames):
@@ -242,6 +252,11 @@ def serve_trace(engine: ServingEngine, trace, services: Dict[int, object], *,
             if req.ue >= 0:
                 outstanding[req.ue] = False
         completed_cursor = len(engine.completed)
+        # terminal failures (deadline sheds / drops) free the UE slot too
+        for req in engine.failed[failed_cursor:]:
+            if req.ue >= 0:
+                outstanding[req.ue] = False
+        failed_cursor = len(engine.failed)
     out = engine.summary(trace.frames)
     out["submitted"] = rid
     out["satisfied"] = sum(r.quality >= r.quality_threshold

@@ -3,12 +3,20 @@
 Every scheduling quantum of a :class:`~repro.serving.engine.ServingEngine`
 (standalone or as one cell of a :class:`~repro.serving.cluster.ClusterEngine`)
 emits one :class:`QuantumEvent`: queue depth, admission counts, per-node
-load/capacity, and the quantum's cost decomposition into the C9 legs
-(uplink / compute / migration / handover / downlink).  The log serializes to
-a versioned JSON document validated against :data:`TELEMETRY_SCHEMA` — the
-contract ``benchmarks/bench_cluster.py`` and external consumers read, and
-the round-trip (``to_json`` → ``validate`` → ``from_json``) is pinned by
-``tests/test_workloads.py``.
+load/capacity, the quantum's cost decomposition into the C9 legs
+(uplink / compute / migration / handover / downlink), and the resilience
+counters (nodes down, failovers, retries, deadline misses, final drops).
+The log serializes to a versioned JSON document validated against
+:data:`TELEMETRY_SCHEMA` — the contract ``benchmarks/bench_cluster.py`` and
+external consumers read, and the round-trip (``to_json`` → ``validate`` →
+``from_json``) is pinned by ``tests/test_workloads.py``.
+
+Schema versioning: documents carry an integer ``schema_version``
+(:data:`SCHEMA_VERSION`, currently 2).  Version 2 added the failure-counter
+fields; version-1 documents (no ``schema_version`` key) are still accepted
+by :meth:`TelemetryLog.from_json`, which validates them against the kept v1
+schema and zero-fills the missing counters — so older BENCH artifacts keep
+loading.
 
 No external schema library: :func:`validate` is a minimal checker for the
 subset of JSON Schema the contract uses (type / required / properties /
@@ -21,14 +29,26 @@ from typing import Dict, List
 
 import numpy as np
 
-TELEMETRY_VERSION = "repro.serving.telemetry/1"
+TELEMETRY_VERSION = "repro.serving.telemetry/2"
+TELEMETRY_VERSION_V1 = "repro.serving.telemetry/1"
+SCHEMA_VERSION = 2
 
-LEGS = ("uplink", "compute", "migration", "handover", "downlink")
+# the v1 C9 legs; schema v2 added the "failover" leg (a migration forced
+# by node failure — see repro.serving.kv_manager.TRANSFER_KINDS)
+LEGS_V1 = ("uplink", "compute", "migration", "handover", "downlink")
+LEGS = LEGS_V1 + ("failover",)
 
-_EVENT_SCHEMA = {
+# per-quantum resilience counters added in schema v2 (ISSUE 7)
+FAULT_FIELDS = ("node_down", "failovers", "retries", "deadline_misses",
+                "final_drops")
+
+_EVENT_FIELDS_V1 = ["frame", "cell", "queue_depth", "admitted", "dropped",
+                    "active", "delivered", "node_load", "node_capacity",
+                    "legs"]
+
+_EVENT_SCHEMA_V1 = {
     "type": "object",
-    "required": ["frame", "cell", "queue_depth", "admitted", "dropped",
-                 "active", "delivered", "node_load", "node_capacity", "legs"],
+    "required": list(_EVENT_FIELDS_V1),
     "properties": {
         "frame": {"type": "integer"},
         "cell": {"type": "integer"},
@@ -41,17 +61,41 @@ _EVENT_SCHEMA = {
         "node_capacity": {"type": "array", "items": {"type": "integer"}},
         "legs": {
             "type": "object",
+            "required": list(LEGS_V1),
+            "properties": {leg: {"type": "number"} for leg in LEGS_V1},
+        },
+    },
+}
+
+_EVENT_SCHEMA = {
+    "type": "object",
+    "required": _EVENT_FIELDS_V1 + list(FAULT_FIELDS),
+    "properties": {
+        **_EVENT_SCHEMA_V1["properties"],
+        "legs": {
+            "type": "object",
             "required": list(LEGS),
             "properties": {leg: {"type": "number"} for leg in LEGS},
         },
+        **{f: {"type": "integer"} for f in FAULT_FIELDS},
+    },
+}
+
+TELEMETRY_SCHEMA_V1 = {
+    "type": "object",
+    "required": ["version", "events"],
+    "properties": {
+        "version": {"type": "string"},
+        "events": {"type": "array", "items": _EVENT_SCHEMA_V1},
     },
 }
 
 TELEMETRY_SCHEMA = {
     "type": "object",
-    "required": ["version", "events"],
+    "required": ["version", "schema_version", "events"],
     "properties": {
         "version": {"type": "string"},
+        "schema_version": {"type": "integer"},
         "events": {"type": "array", "items": _EVENT_SCHEMA},
     },
 }
@@ -105,12 +149,20 @@ class QuantumEvent:
     node_load: List[int]             # blocks executed per node
     node_capacity: List[int]         # W_hat per node
     legs: Dict[str, float]           # costs CHARGED this quantum, per LEG
+    # -- resilience counters (schema v2; all zero on a healthy run) ------------
+    node_down: int = 0               # nodes down at this quantum
+    failovers: int = 0               # in-flight latents re-placed this quantum
+    retries: int = 0                 # denied requests re-considered this quantum
+    deadline_misses: int = 0         # requests shed past their deadline
+    final_drops: int = 0             # requests terminally dropped (no failover)
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
         d["node_load"] = [int(x) for x in self.node_load]
         d["node_capacity"] = [int(x) for x in self.node_capacity]
         d["legs"] = {k: float(self.legs.get(k, 0.0)) for k in LEGS}
+        for f in FAULT_FIELDS:
+            d[f] = int(d[f])
         return d
 
 
@@ -152,21 +204,43 @@ class TelemetryLog:
             "delivered": int(sum(ev.delivered for ev in self.events)),
             "mean_node_utilization": self.utilization(),
             "legs": self.leg_totals(),
+            # resilience totals (ISSUE 7): zero on a healthy run
+            "failovers": int(sum(ev.failovers for ev in self.events)),
+            "retries": int(sum(ev.retries for ev in self.events)),
+            "deadline_misses": int(sum(ev.deadline_misses
+                                       for ev in self.events)),
+            "final_drops": int(sum(ev.final_drops for ev in self.events)),
+            "max_node_down": int(max((ev.node_down for ev in self.events),
+                                     default=0)),
         }
 
     # -- JSON round-trip -------------------------------------------------------
 
     def to_json(self) -> dict:
         doc = {"version": TELEMETRY_VERSION,
+               "schema_version": SCHEMA_VERSION,
                "events": [ev.to_json() for ev in self.events]}
         validate(doc)
         return doc
 
     @classmethod
     def from_json(cls, doc: dict) -> "TelemetryLog":
-        validate(doc)
-        if doc["version"] != TELEMETRY_VERSION:
-            raise ValueError(f"telemetry version mismatch: {doc['version']!r}")
+        """Load a telemetry document; v1 documents (no ``schema_version``)
+        are accepted with their missing failure counters zero-filled."""
+        version = doc.get("schema_version") if isinstance(doc, dict) else None
+        if version is None:
+            validate(doc, TELEMETRY_SCHEMA_V1)
+            if doc["version"] != TELEMETRY_VERSION_V1:
+                raise ValueError(
+                    f"telemetry version mismatch: {doc['version']!r}")
+        else:
+            validate(doc)
+            if version != SCHEMA_VERSION:
+                raise ValueError(f"telemetry schema_version mismatch: "
+                                 f"{version!r} (expected {SCHEMA_VERSION})")
+            if doc["version"] != TELEMETRY_VERSION:
+                raise ValueError(
+                    f"telemetry version mismatch: {doc['version']!r}")
         log = cls()
         for ev in doc["events"]:
             log.record(QuantumEvent(
@@ -175,5 +249,6 @@ class TelemetryLog:
                 dropped=ev["dropped"], active=ev["active"],
                 delivered=ev["delivered"], node_load=list(ev["node_load"]),
                 node_capacity=list(ev["node_capacity"]),
-                legs=dict(ev["legs"])))
+                legs=dict(ev["legs"]),
+                **{f: int(ev.get(f, 0)) for f in FAULT_FIELDS}))
         return log

@@ -1,4 +1,6 @@
 from repro.sim.env import IDLE, PENDING, EdgeSimulator, SimConfig  # noqa: F401
+from repro.sim.faults import (FaultTrace, fault_descriptions,  # noqa: F401
+                              fault_names, fault_trace, register_fault)
 from repro.sim.mobility import RandomWaypoint, VecRandomWaypoint  # noqa: F401
 from repro.sim.quality import from_gdm_model, synthetic_curves  # noqa: F401
 from repro.sim.scenarios import (get_scenario, register_scenario,  # noqa: F401

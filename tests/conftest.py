@@ -12,6 +12,18 @@ import numpy as np
 import pytest
 
 
+def pytest_addoption(parser):
+    # pytest.ini sets a per-test wall cap via pytest-timeout's ini keys.
+    # CI installs the plugin; the dev image may not have it, and pytest
+    # warns on unknown ini options — register no-op fallbacks only when
+    # the plugin is absent (registering twice is an error).
+    import importlib.util
+    if importlib.util.find_spec("pytest_timeout") is None:
+        parser.addini("timeout", "per-test timeout (pytest-timeout shim)")
+        parser.addini("timeout_method",
+                      "timeout enforcement method (pytest-timeout shim)")
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)

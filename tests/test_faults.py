@@ -1,0 +1,118 @@
+"""Fault-schedule registry: determinism, shapes, and schedule semantics."""
+import numpy as np
+import pytest
+
+from repro.sim.faults import (FAULT_LEGS, FaultDraw, fault_descriptions,
+                              fault_names, fault_trace, get_fault,
+                              register_fault)
+from repro.sim.scenarios import get_scenario
+
+CFG = get_scenario("smoke")
+FRAMES, CELLS = 40, 3
+
+
+def test_registry_surface():
+    names = fault_names()
+    for expected in ("none", "node-churn", "link-degrade", "stragglers",
+                     "cell-outage", "mixed"):
+        assert expected in names
+    assert set(fault_descriptions()) == set(names)
+    with pytest.raises(KeyError, match="unknown fault schedule"):
+        get_fault("no-such-schedule")
+    with pytest.raises(AssertionError, match="duplicate"):
+        register_fault("none", "dup")(lambda *a, **k: FaultDraw())
+
+
+def test_none_schedule_is_strict_noop():
+    tr = fault_trace(CFG, FRAMES, CELLS, "none", seed=7)
+    assert not tr.any_fault
+    assert tr.node_up.all()
+    assert (tr.cap_scale == 1.0).all()
+    assert (tr.link_scale == 1.0).all()
+    assert tr.node_up.shape == (FRAMES, CELLS, CFG.num_bs)
+    assert tr.link_scale.shape == (FRAMES, CELLS, len(FAULT_LEGS))
+
+
+def test_traces_are_deterministic_and_seed_sensitive():
+    a = fault_trace(CFG, FRAMES, CELLS, "node-churn", seed=3, mttf=10,
+                    mttr=4)
+    b = fault_trace(CFG, FRAMES, CELLS, "node-churn", seed=3, mttf=10,
+                    mttr=4)
+    c = fault_trace(CFG, FRAMES, CELLS, "node-churn", seed=4, mttf=10,
+                    mttr=4)
+    assert np.array_equal(a.node_up, b.node_up)
+    assert not np.array_equal(a.node_up, c.node_up)
+
+
+def test_node_churn_produces_failures_and_repairs():
+    tr = fault_trace(CFG, 200, CELLS, "node-churn", seed=1, mttf=10, mttr=4)
+    assert tr.any_fault
+    down = ~tr.node_up
+    assert down.any(), "no failure in 200 frames at mttf=10"
+    # at least one node comes back after going down (repair observed)
+    flat = tr.node_up.reshape(200, -1)
+    repaired = ((~flat[:-1]) & flat[1:]).any()
+    assert repaired
+
+
+def test_link_degrade_scales_only_transmission_legs():
+    tr = fault_trace(CFG, 200, CELLS, "link-degrade", seed=2, p_degrade=0.2,
+                     p_recover=0.3, factor=2.5)
+    assert tr.node_up.all()                      # nodes untouched
+    assert (tr.cap_scale == 1.0).all()
+    vals = np.unique(tr.link_scale)
+    assert set(vals) <= {1.0, 2.5}
+    assert 2.5 in vals
+
+
+def test_stragglers_scale_capacity_within_bounds():
+    tr = fault_trace(CFG, 100, CELLS, "stragglers", seed=5, prob=0.3,
+                     factor=0.5)
+    assert tr.node_up.all()
+    vals = np.unique(tr.cap_scale)
+    assert set(vals) <= {0.5, 1.0}
+    assert 0.5 in vals
+
+
+def test_cell_outage_downs_whole_cells_for_duration():
+    tr = fault_trace(CFG, 60, CELLS, "cell-outage", seed=6, duration=5)
+    for c in range(CELLS):
+        cell_down = ~tr.node_up[:, c, :]
+        frames_down = np.where(cell_down.all(axis=1))[0]
+        assert len(frames_down) == 5
+        # contiguous window, every node down together
+        assert frames_down[-1] - frames_down[0] == 4
+        partial = cell_down.any(axis=1) & ~cell_down.all(axis=1)
+        assert not partial.any()
+
+
+def test_mixed_composes_all_three_components():
+    tr = fault_trace(CFG, 300, CELLS, "mixed", seed=8, mttf=15, mttr=5,
+                     p_degrade=0.1, p_recover=0.3, straggle_prob=0.2)
+    assert (~tr.node_up).any()
+    assert (tr.cap_scale != 1.0).any()
+    assert (tr.link_scale != 1.0).any()
+
+
+def test_fault_draws_do_not_perturb_workload_streams():
+    """The determinism contract: fault draws live on a dedicated rng
+    sub-stream, so the SAME workload trace comes out whether or not a fault
+    trace was drawn (and whatever its parameters)."""
+    from repro.sim.workloads import fleet_trace
+    ref = fleet_trace(CFG, 20, CELLS, workload="diurnal", seed=0)
+    fault_trace(CFG, 20, CELLS, "mixed", seed=0)
+    again = fleet_trace(CFG, 20, CELLS, workload="diurnal", seed=0)
+    for a, b in zip(ref.cells, again.cells):
+        assert np.array_equal(a.arrivals, b.arrivals)
+        assert np.array_equal(a.poa, b.poa)
+    assert np.array_equal(ref.handovers, again.handovers)
+
+
+def test_trace_validation_rejects_bad_shapes():
+    @register_fault("_bad-shape-test", "test-only")
+    def _bad(cfg, frames, num_cells, rng, **params):
+        return FaultDraw(node_up=np.ones((frames, num_cells + 1,
+                                          cfg.num_bs), bool))
+
+    with pytest.raises(AssertionError, match="node_up shape"):
+        fault_trace(CFG, 5, 2, "_bad-shape-test")

@@ -1,0 +1,381 @@
+"""Fault injection + recovery: the resilience contracts.
+
+* **Zero-fault pin** — driving a ``"none"`` fault trace through the full
+  fault plumbing leaves a cluster run frame-for-frame identical (per-quantum
+  stats, summaries, telemetry, ledger) to the driver that never saw the
+  faults module — across default, greedy-bridge, and learned-bridge
+  placements.  This extends the standing equivalence-harness chain: every
+  fault/recovery branch must be strictly inert while healthy.
+* **Conservation under faults** — with node churn injected, no request is
+  lost or duplicated: every submitted rid ends exactly once in {completed,
+  deadline-shed, drop} (or is still in flight), and failover legs land in
+  the ledger with matching bytes.
+* Unit contracts: failover re-placement, drop-only mode, deadline shedding,
+  admission retry backoff, graceful degradation, the dead-node action mask,
+  and the ``_denied_once`` pruning regression.
+"""
+import numpy as np
+import pytest
+
+from repro.core.learn_gdm import (LearnGDMController, variant_action_mask_vec)
+from repro.core.policy import GreedyPoAPolicy, LearnedPolicy
+from repro.serving import (RecoveryConfig, Request, TelemetryLog,
+                           TransferLedger, cluster_from_scenario,
+                           engine_from_scenario, serve_fleet)
+from repro.serving.engine import (EngineConfig, NodeExecutor, NodeSpec,
+                                  ServingEngine)
+from repro.serving.kv_manager import state_nbytes
+from repro.sim.env import EdgeSimulator
+from repro.sim.faults import fault_trace
+from repro.sim.scenarios import get_scenario
+from repro.sim.workloads import fleet_trace
+
+from test_cluster import LinearService, _services
+
+CELLS = 2
+FRAMES = 14
+
+
+def _learned_factory():
+    cfg = get_scenario("smoke")
+    agent = LearnGDMController(EdgeSimulator(cfg), variant="learn-gdm",
+                               seed=0).agent
+    return lambda c: LearnedPolicy(agent, "learn-gdm")
+
+
+_POLICY_FACTORIES = {
+    "default": lambda: None,
+    "greedy-bridge": lambda: (lambda c: GreedyPoAPolicy()),
+    "learned-bridge": _learned_factory,
+}
+
+
+@pytest.mark.parametrize("policy_name", sorted(_POLICY_FACTORIES),
+                         ids=sorted(_POLICY_FACTORIES))
+def test_zero_fault_run_identical_to_engine_without_faults(policy_name):
+    cfg = get_scenario("smoke")
+    fleet = fleet_trace(cfg, FRAMES, CELLS, workload="diurnal", seed=5,
+                        handover_rate=0.1)
+
+    def run(faults):
+        policy_factory = _POLICY_FACTORIES[policy_name]()
+        telemetry, ledger = TelemetryLog(), TransferLedger()
+        cluster = cluster_from_scenario(cfg, CELLS, _services(cfg),
+                                        policy_factory=policy_factory,
+                                        telemetry=telemetry, ledger=ledger)
+        out = serve_fleet(cluster, fleet, _services(cfg), seed=0,
+                          collect_steps=True, faults=faults)
+        return out, telemetry, ledger
+
+    ref_out, ref_tel, ref_led = run(None)       # the pre-fault driver path
+    out, tel, led = run(fault_trace(cfg, FRAMES, CELLS, "none", seed=7))
+    for t in range(FRAMES):
+        assert out["steps"][t] == ref_out["steps"][t], t
+    assert out == ref_out
+    assert tel.to_json() == ref_tel.to_json()
+    assert [vars(e) for e in led.events] == [vars(e) for e in ref_led.events]
+    # and truly zero resilience activity on the healthy path
+    assert out["drops"] == out["retries"] == out["failovers"] == 0
+    assert out["deadline_misses"] == 0
+    assert out["goodput"] == out["completed"]
+
+
+def _churn_run(mode, *, degrade=False, deadline=0, frames=40, seed=11):
+    cfg = get_scenario("smoke")
+    services = _services(cfg)
+    telemetry, ledger = TelemetryLog(), TransferLedger()
+    recovery = RecoveryConfig(mode=mode, deadline_frames=deadline,
+                              degrade=degrade)
+    cluster = cluster_from_scenario(cfg, CELLS, services, telemetry=telemetry,
+                                    ledger=ledger, recovery=recovery)
+    fleet = fleet_trace(cfg, frames, CELLS, workload="stationary", seed=seed,
+                        handover_rate=0.1)
+    faults = fault_trace(cfg, frames, CELLS, "node-churn", seed=seed,
+                         mttf=8.0, mttr=4.0)
+    assert faults.any_fault
+    out = serve_fleet(cluster, fleet, services, seed=0, faults=faults)
+    return cfg, cluster, out, telemetry, ledger
+
+
+def test_conservation_under_node_churn_with_failover():
+    cfg, cluster, out, telemetry, ledger = _churn_run("failover")
+    assert out["failovers"] > 0, "churn at mttf=8 produced no failover"
+    # every submitted rid ends exactly once in a terminal set or is still
+    # in flight — nothing lost, nothing duplicated
+    terminal = {}
+    for eng in cluster.engines:
+        for r in eng.completed:
+            assert r.outcome == "completed"
+            terminal[r.rid] = terminal.get(r.rid, 0) + 1
+        for r in eng.failed:
+            assert r.outcome in ("deadline-shed", "drop")
+            terminal[r.rid] = terminal.get(r.rid, 0) + 1
+    assert all(v == 1 for v in terminal.values())
+    in_flight = sum(len(e.active) + len(e.pending) for e in cluster.engines)
+    assert len(terminal) + in_flight == out["submitted"]
+    # failover legs land in the ledger with matching bytes (the service
+    # state is constant-size, so every leg of a rid ships the same payload)
+    fo_events = [e for e in ledger.events if e.kind == "failover"]
+    assert len(fo_events) == out["failovers"]
+    expected = state_nbytes(LinearService().init_state(None))
+    assert expected > 0
+    for ev in fo_events:
+        assert ev.nbytes == expected
+    # summary / telemetry totals agree (satellite: totals are surfaced)
+    tsum = telemetry.summary()
+    assert tsum["failovers"] == out["failovers"]
+    assert tsum["retries"] == out["retries"]
+    assert tsum["deadline_misses"] == out["deadline_misses"]
+    assert tsum["final_drops"] == out["drops"]
+    assert tsum["max_node_down"] > 0
+    # completed requests that failed over carry the charge
+    moved = [r for eng in cluster.engines for r in eng.completed
+             if r.failovers > 0]
+    for r in moved:
+        assert r.trans_cost >= r.failover_cost
+
+
+def test_drop_mode_finalizes_in_flight_requests():
+    cfg, cluster, out, telemetry, ledger = _churn_run("drop")
+    assert out["drops"] > 0, "churn at mttf=8 dropped nothing in drop mode"
+    assert out["failovers"] == 0
+    assert not [e for e in ledger.events if e.kind == "failover"]
+    dropped = [r for eng in cluster.engines for r in eng.failed
+               if r.outcome == "drop"]
+    assert len(dropped) == out["drops"]
+    for r in dropped:
+        assert r.done and r.delivered_frame == -1
+
+
+def test_ledger_bytes_conserved_per_request_across_fleet_run():
+    """Satellite: per-request byte balance over a handover-heavy cluster run
+    — every charged leg of a rid ships the request's (constant-size) live
+    state, and the per-kind ledger totals decompose exactly into the
+    per-rid sums, failover legs included."""
+    cfg, cluster, out, telemetry, ledger = _churn_run("failover")
+    assert out["handovers"] > 0
+    per_rid_nbytes = {}
+    per_kind = {}
+    expected = state_nbytes(LinearService().init_state(None))
+    for ev in ledger.events:
+        per_rid_nbytes.setdefault(ev.rid, set()).add(ev.nbytes)
+        k = per_kind.setdefault(ev.kind, [0, 0])
+        k[0] += 1
+        k[1] += ev.nbytes
+    for rid, sizes in per_rid_nbytes.items():
+        assert sizes == {expected}, (rid, sizes)
+    totals = ledger.totals()
+    for kind, (count, nbytes) in per_kind.items():
+        assert totals[kind]["count"] == count
+        assert totals[kind]["nbytes"] == nbytes
+        assert nbytes == count * expected
+    # telemetry's charged-leg cost stream reconciles with the ledger
+    tlegs = telemetry.leg_totals()
+    for kind in ("uplink", "migration", "handover", "downlink", "failover"):
+        assert tlegs[kind] == pytest.approx(totals[kind]["cost"]), kind
+
+
+# -- unit contracts ------------------------------------------------------------
+
+def _tiny_engine(*, recovery=None, n_nodes=3, capacity=2, slots=2,
+                 max_blocks=4):
+    y = np.asarray([[0.0, 0.3, 0.6],
+                    [0.3, 0.0, 0.3],
+                    [0.6, 0.3, 0.0]])[:n_nodes, :n_nodes]
+    nodes = [NodeExecutor(NodeSpec(i, capacity, 0.1),
+                          {0: lambda s, k: (s, 0.2 * (k + 1))})
+             for i in range(n_nodes)]
+    cfg = EngineConfig(max_blocks=max_blocks, admission_slots=slots,
+                       early_exit=False, charge_downlink=False)
+    return ServingEngine(nodes, cfg, y, recovery=recovery,
+                         ledger=TransferLedger())
+
+
+def _req(rid, origin=0, thr=0.9):
+    return Request(rid=rid, service=0, arrival_frame=0,
+                   quality_threshold=thr, origin=origin,
+                   state={"latent": np.zeros(4, np.float32)})
+
+
+def test_failover_replaces_latent_from_last_block():
+    eng = _tiny_engine(recovery=RecoveryConfig(mode="failover"))
+    req = _req(0, origin=0)
+    eng.submit(req)
+    eng.step()
+    assert req.node == 0 and req.blocks_done == 1
+    eng.set_fault_state(np.asarray([False, True, True]))
+    eng.step()
+    assert req.failovers == 1 and req.failover_from == -1
+    assert req.node in (1, 2) and eng._node_up[req.node]
+    assert req.blocks_done == 2                  # progress survived
+    assert req.failover_cost == pytest.approx(0.3)  # y[0, 1]: nearest node
+    totals = eng.ledger.totals()
+    assert totals["failover"]["count"] == 1
+    assert totals["failover"]["nbytes"] == 16
+
+
+def test_drop_mode_drops_instead_of_failing_over():
+    eng = _tiny_engine(recovery=RecoveryConfig(mode="drop"))
+    req = _req(0)
+    eng.submit(req)
+    eng.step()
+    eng.set_fault_state(np.asarray([False, True, True]))
+    eng.step()
+    assert req.done and req.outcome == "drop"
+    assert req in eng.failed and req not in eng.active
+    assert eng.drops_total == 1 and eng.failovers_total == 0
+
+
+def test_without_recovery_faults_mask_placement_but_never_finalize():
+    """No RecoveryConfig: dead nodes are still masked from placement (the
+    request migrates off via a plain migration leg), but nothing is ever
+    dropped, shed, or charged as failover."""
+    eng = _tiny_engine()
+    req = _req(0)
+    eng.submit(req)
+    eng.step()
+    assert req.node == 0
+    eng.set_fault_state(np.asarray([False, True, True]))
+    eng.step()
+    assert req.node in (1, 2)                    # moved off the dead node
+    assert req.failovers == 0 and req.failover_cost == 0.0
+    assert req.migration_cost > 0.0              # charged as a normal hop
+    assert not req.done and not eng.failed
+    assert eng.ledger.totals()["failover"]["count"] == 0
+
+
+def test_deadline_sheds_pending_and_active():
+    eng = _tiny_engine(recovery=RecoveryConfig(deadline_frames=2),
+                       slots=1)
+    a, b = _req(0, origin=0), _req(1, origin=0)
+    eng.submit(a)
+    eng.submit(b)                                # loses the 1-slot MAC race
+    for _ in range(4):
+        eng.step()
+    shed = [r for r in eng.failed if r.outcome == "deadline-shed"]
+    assert b in shed
+    assert eng.deadline_misses_total == len(shed) > 0
+    assert all(0 <= r.deadline < eng.frame for r in shed)
+
+
+def test_admission_retry_backoff_caps():
+    rec = RecoveryConfig(retry_backoff_base=1, retry_backoff_cap=4)
+    eng = _tiny_engine(recovery=rec, slots=2)
+    eng.set_fault_state(np.asarray([False, True, True]))  # entry node dead
+    req = _req(0, origin=0)
+    eng.submit(req)
+    delays = []
+    for _ in range(12):
+        before = req.retries
+        eng.step()
+        if req.retries > before:
+            delays.append(req.next_retry_frame - (eng.frame - 1))
+    assert delays[0] == 1                        # first retry: next quantum
+    assert max(delays) == rec.retry_backoff_cap  # growth is capped
+    assert delays == sorted(delays)
+    assert eng.retries_total > 0
+    assert not req.admitted                      # still waiting, not lost
+    assert req in eng.pending
+
+
+def test_graceful_degradation_cuts_chain_under_pressure():
+    rec = RecoveryConfig(deadline_frames=3, degrade=True,
+                         degrade_pressure=0.0)
+    eng = _tiny_engine(recovery=rec, n_nodes=1, capacity=1, slots=1,
+                       max_blocks=8)
+    reqs = [_req(i, origin=0) for i in range(4)]
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(10):
+        eng.step()
+    degraded = [r for r in eng.completed if 0 < r.blocks_done < 8]
+    assert degraded, "degradation never cut a chain"
+    for r in degraded:
+        assert r.outcome == "completed"
+        assert r.delivered_frame <= r.deadline   # margin became compliance
+    # degradation must not fire without the flag
+    eng2 = _tiny_engine(recovery=RecoveryConfig(deadline_frames=3),
+                        n_nodes=1, capacity=1, slots=1, max_blocks=8)
+    r2 = _req(0, origin=0)
+    eng2.submit(r2)
+    eng2.step()
+    assert r2.degraded_to == -1
+
+
+def test_dead_nodes_masked_in_policy_action_mask():
+    cfg = get_scenario("smoke")
+
+    class View:
+        def __init__(self, up):
+            self.cfg = cfg
+            self.num_envs = 1
+            self.blocks_done = np.zeros((1, cfg.num_ues), int)
+            self.cur_node = np.zeros((1, cfg.num_ues), int)
+            self.node_up = up
+
+    up = np.ones((1, cfg.num_bs), bool)
+    up[0, 1] = False
+    mask = variant_action_mask_vec(View(up), "learn-gdm")
+    assert not mask[0, :, 2].any()               # node 1 = action 2: dead
+    assert mask[0, :, 0].all()                   # null action stays legal
+    assert mask[0, :, 1].all()                   # node 0 stays legal
+    # no node_up attribute (sim envs): mask untouched
+    full = variant_action_mask_vec(View(None), "learn-gdm")
+    assert full.all()
+
+
+def test_denied_once_pruned_on_completion_and_recycled_rid_recounted():
+    """Regression (satellite): the denied-once set must not leak rids, and
+    a recycled rid must be counted as a fresh admission drop."""
+    eng = _tiny_engine(slots=1)
+    a, b = _req(0, origin=0), _req(1, origin=0)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()
+    assert b.rid in eng._denied_once             # b lost the 1-slot race
+    while not b.done:
+        eng.step()
+    assert a.done and b.done
+    assert eng._denied_once == set()             # pruned on completion
+    # recycle rid 1: it must be re-counted as a fresh drop
+    c, d = _req(2, origin=0), _req(1, origin=0)
+    eng.submit(c)
+    eng.submit(d)
+    eng.step()
+    assert eng._last_dropped == 0                # reset after telemetry
+    assert d.rid in eng._denied_once
+
+    # and pruning happens on terminal failure too
+    eng2 = _tiny_engine(recovery=RecoveryConfig(mode="drop"), slots=1)
+    x, y = _req(0, origin=0), _req(1, origin=0)
+    eng2.submit(x)
+    eng2.submit(y)
+    eng2.step()
+    assert y.rid in eng2._denied_once
+    eng2.set_fault_state(np.asarray([False, True, True]))
+    eng2.step()                                  # x dropped on node death
+    assert x.outcome == "drop"
+    eng2.set_fault_state(np.asarray([True, True, True]))
+    while not y.done:
+        eng2.step()
+    assert eng2._denied_once == set()
+
+
+def test_handover_deferred_into_fully_down_cell():
+    from repro.serving import HandoverEvent
+    cfg = get_scenario("smoke")
+    services = _services(cfg)
+    cluster = cluster_from_scenario(cfg, 2, services)
+    req = Request(rid=0, service=0, arrival_frame=0, quality_threshold=0.9,
+                  ue=1, origin=0, state=services[0].init_state(None))
+    cluster.submit(0, req)
+    cluster.step()
+    assert req in cluster.engines[0].active
+    n = cfg.num_bs
+    cluster.engines[1].set_fault_state(np.zeros(n, bool))   # dst cell dark
+    ev = HandoverEvent(ue=1, src_cell=0, dst_cell=1, dst_origin=0)
+    assert cluster.apply_handovers([ev]) == []
+    assert req in cluster.engines[0].active
+    cluster.engines[1].set_fault_state(np.ones(n, bool))    # cell restored
+    assert cluster.apply_handovers([ev]) != []
+    assert req in cluster.engines[1].active

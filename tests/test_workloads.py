@@ -10,8 +10,9 @@
 import numpy as np
 import pytest
 
-from repro.serving.telemetry import (QuantumEvent, TelemetryLog,
-                                     TELEMETRY_VERSION, validate)
+from repro.serving.telemetry import (QuantumEvent, SCHEMA_VERSION,
+                                     TelemetryLog, TELEMETRY_VERSION,
+                                     validate)
 from repro.sim.scenarios import get_scenario, request_trace
 from repro.sim.workloads import (arrival_envelope, fleet_trace, get_workload,
                                  workload_names, workload_trace)
@@ -143,12 +144,38 @@ def test_telemetry_validation_rejects_malformed_documents():
     bad_event = {**_event().to_json()}
     del bad_event["queue_depth"]
     with pytest.raises(ValueError, match="queue_depth"):
-        validate({"version": TELEMETRY_VERSION, "events": [bad_event]})
+        validate({"version": TELEMETRY_VERSION,
+                  "schema_version": SCHEMA_VERSION, "events": [bad_event]})
     wrong_type = _event().to_json()
     wrong_type["node_load"] = "not-a-list"
     with pytest.raises(ValueError, match="node_load"):
-        validate({"version": TELEMETRY_VERSION, "events": [wrong_type]})
+        validate({"version": TELEMETRY_VERSION,
+                  "schema_version": SCHEMA_VERSION, "events": [wrong_type]})
+    # the v2 document schema requires the schema_version marker itself
+    with pytest.raises(ValueError, match="schema_version"):
+        validate({"version": TELEMETRY_VERSION, "events": []})
     assert doc["events"] == []
+    assert doc["schema_version"] == SCHEMA_VERSION
+
+
+def test_telemetry_accepts_legacy_v1_documents():
+    """Pre-versioning documents (no ``schema_version``, no failure fields)
+    still load; the missing counters zero-fill."""
+    ev = _event().to_json()
+    for field in ("node_down", "failovers", "retries", "deadline_misses",
+                  "final_drops"):
+        del ev[field]
+    del ev["legs"]["failover"]
+    legacy = {"version": "repro.serving.telemetry/1", "events": [ev]}
+    log = TelemetryLog.from_json(legacy)
+    assert len(log.events) == 1
+    assert log.events[0].failovers == 0
+    assert log.summary()["failovers"] == 0
+    # a v1 payload claiming to be v2 is rejected on the missing fields
+    with pytest.raises(ValueError, match="node_down"):
+        TelemetryLog.from_json({"version": TELEMETRY_VERSION,
+                                "schema_version": SCHEMA_VERSION,
+                                "events": [ev]})
 
 
 def test_engine_emits_schema_valid_telemetry(tmp_path):
