@@ -1,0 +1,191 @@
+"""Serving-path kernel bench for the DiT hot path (GDM denoise blocks).
+
+Measures what the serving engine actually pays per (node, quantum): the
+jitted ``run_block_batched`` call, per (impl x batch bucket) — both
+compile time (the fleet pays it once per bucket per impl) and steady-state
+per-block latency.  Also times layer-scan vs unrolled-loop compilation on
+a deeper stack (the scan exists to cut compile time) and reads the fused
+vs unfused denoise step through the trip-count-aware HLO cost model
+(``repro.distributed.hlo_cost``), the same harness the roofline table uses.
+
+Asserts (env-tunable, CI-enforced):
+  * layer-scan compile time strictly below the unrolled baseline;
+  * scanned xla per-block latency within REPRO_BENCH_GDM_LATENCY_RATIO_MAX
+    (default 1.5) of the unrolled path — the refactor must not regress the
+    serving hot path;
+  * interpret-mode adaLN / non-causal flash outputs match the pure-jnp
+    oracles, and a small interpret run_block_batched matches xla <= 1e-6;
+  * ``impl="auto"`` resolves to pallas on TPU / xla elsewhere, and a
+    default GDMService picks it up (no hardcoded "xla" anywhere).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, run_meta, timed
+from repro.configs import get_config
+from repro.distributed.hlo_cost import module_cost
+from repro.kernels import ops, ref
+from repro.models.gdm import (LATENT_CHANNELS, gdm_denoise, init_gdm,
+                              make_schedule, run_block_batched)
+
+RNG = np.random.default_rng(0)
+
+BUCKETS = (1, 2, 4, 8, 16)
+LATENCY_RATIO_MAX = float(
+    os.environ.get("REPRO_BENCH_GDM_LATENCY_RATIO_MAX", "1.5"))
+
+
+def arr(*shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.standard_normal(shape), dtype)
+
+
+def _inputs(cfg, b):
+    latent = arr(b, cfg.latent_hw ** 2, LATENT_CHANNELS)
+    prompt = jnp.asarray(RNG.integers(2, cfg.vocab_size, (b, 8)), jnp.int32)
+    return latent, prompt
+
+
+def _block_fn(params, cfg, schedule, *, spb, total, impl, unroll=False):
+    def fn(latent, prompt, block_idx):
+        return run_block_batched(params, latent, prompt, cfg, schedule,
+                                 block_idx, steps_per_block=spb,
+                                 total_steps=total, impl=impl,
+                                 unroll_layers=unroll)
+    return jax.jit(fn)
+
+
+def _compile_s(jitted, *args) -> float:
+    t0 = time.perf_counter()
+    jitted.lower(*args).compile()
+    return time.perf_counter() - t0
+
+
+def run() -> dict:
+    out = {"meta": run_meta(), "buckets": {}, "compile": {},
+           "hlo": {}, "equivalence": {}}
+    cfg = get_config("gdm-dit").reduced()
+    spb, total = 1, 4
+    schedule = make_schedule(total)
+    params = init_gdm(jax.random.PRNGKey(0), cfg)
+
+    backend = jax.default_backend()
+    impls = ["xla"] + (["pallas"] if backend == "tpu" else [])
+
+    # -- (impl x bucket) compile time + per-block latency ------------------
+    for impl in impls:
+        for b in BUCKETS:
+            latent, prompt = _inputs(cfg, b)
+            idx = jnp.zeros((b,), jnp.int32)
+            fn = _block_fn(params, cfg, schedule, spb=spb, total=total,
+                           impl=impl)
+            compile_s = _compile_s(fn, latent, prompt, idx)
+            _, us = timed(lambda: jax.block_until_ready(
+                fn(latent, prompt, idx)))
+            emit(f"gdm_block_{impl}_b{b}", us,
+                 f"compile={compile_s:.2f}s spb={spb}")
+            out["buckets"][f"{impl}_b{b}"] = {
+                "latency_us": us, "compile_s": compile_s}
+
+    # -- layer-scan vs unrolled: compile time on a deeper stack ------------
+    deep = dataclasses.replace(cfg, num_layers=8)
+    deep_params = init_gdm(jax.random.PRNGKey(1), deep)
+    latent, prompt = _inputs(deep, 4)
+    idx = jnp.zeros((4,), jnp.int32)
+    scan_fn = _block_fn(deep_params, deep, schedule, spb=spb, total=total,
+                        impl="xla")
+    unroll_fn = _block_fn(deep_params, deep, schedule, spb=spb, total=total,
+                          impl="xla", unroll=True)
+    scan_compile = _compile_s(scan_fn, latent, prompt, idx)
+    unroll_compile = _compile_s(unroll_fn, latent, prompt, idx)
+    _, scan_us = timed(lambda: jax.block_until_ready(
+        scan_fn(latent, prompt, idx)))
+    _, unroll_us = timed(lambda: jax.block_until_ready(
+        unroll_fn(latent, prompt, idx)))
+    emit("gdm_scan_compile_8L", scan_compile * 1e6,
+         f"vs unrolled {unroll_compile:.2f}s "
+         f"({unroll_compile / max(scan_compile, 1e-9):.1f}x)")
+    emit("gdm_scan_latency_8L", scan_us,
+         f"vs unrolled {unroll_us:.0f}us")
+    out["compile"] = {
+        "scan_s": scan_compile, "unroll_s": unroll_compile,
+        "scan_latency_us": scan_us, "unroll_latency_us": unroll_us,
+        "latency_ratio_max": LATENCY_RATIO_MAX,
+    }
+    assert scan_compile < unroll_compile, (
+        f"layer-scan must compile faster than the unrolled loop: "
+        f"{scan_compile:.2f}s vs {unroll_compile:.2f}s")
+    assert scan_us <= unroll_us * LATENCY_RATIO_MAX, (
+        f"scanned hot path regressed past the unrolled baseline: "
+        f"{scan_us:.0f}us vs {unroll_us:.0f}us "
+        f"(ratio_max={LATENCY_RATIO_MAX})")
+
+    # -- fused vs unfused denoise step through the HLO cost model ----------
+    t = jnp.zeros((4,), jnp.int32)
+    lat4, pr4 = _inputs(deep, 4)
+    for label, unroll in (("scan", False), ("unroll", True)):
+        jitted = jax.jit(lambda l, p: gdm_denoise(
+            deep_params, l, t, p, deep, impl="xla", unroll=unroll))
+        hlo = jitted.lower(lat4, pr4).compile().as_text()
+        cost = module_cost(hlo)
+        emit(f"gdm_denoise_hlo_{label}", 0.0,
+             f"GFLOPs={cost.flops / 1e9:.3f} MiB={cost.bytes / 2 ** 20:.1f}")
+        out["hlo"][label] = {"flops": cost.flops, "bytes": cost.bytes}
+    # same math either way: scanned FLOPs (trip-count-multiplied) must match
+    # the unrolled module's within rounding
+    f_scan, f_unroll = out["hlo"]["scan"]["flops"], out["hlo"]["unroll"]["flops"]
+    assert abs(f_scan - f_unroll) <= 0.05 * f_unroll, (
+        f"scan/unroll HLO FLOPs diverge: {f_scan:.3e} vs {f_unroll:.3e}")
+
+    # -- interpret-mode equivalence (the real kernel bodies, on CPU) -------
+    x, sh, sc = arr(2, 16, 64), arr(2, 64), arr(2, 64)
+    g, res = arr(2, 64), arr(2, 16, 64)
+    w, bias = arr(64), arr(64)
+    y, r = ops.adaln_norm(x, sh, sc, w, bias, g, res, impl="interpret",
+                          block_rows=8)
+    y_w, r_w = ref.adaln_norm(x, sh, sc, w, bias, gate=g, residual=res)
+    adaln_err = float(max(jnp.max(jnp.abs(y - y_w)), jnp.max(jnp.abs(r - r_w))))
+    emit("gdm_adaln_interpret_check", 0.0, f"max_err={adaln_err:.2e}")
+
+    q, k, v = arr(1, 16, 4, 16), arr(1, 16, 4, 16), arr(1, 16, 4, 16)
+    got = ops.flash_attention(q, k, v, causal=False, impl="interpret",
+                              block_q=8, block_k=8)
+    flash_err = float(jnp.max(jnp.abs(
+        got - ref.attention(q, k, v, causal=False))))
+    emit("gdm_flash_noncausal_interpret_check", 0.0,
+         f"max_err={flash_err:.2e}")
+
+    lat2, pr2 = _inputs(cfg, 2)
+    idx2 = jnp.array([0, 1], jnp.int32)
+    run_x = _block_fn(params, cfg, schedule, spb=spb, total=total,
+                      impl="xla")(lat2, pr2, idx2)
+    run_i = _block_fn(params, cfg, schedule, spb=spb, total=total,
+                      impl="interpret")(lat2, pr2, idx2)
+    block_err = float(max(jnp.max(jnp.abs(a - b))
+                          for a, b in zip(run_x, run_i)))
+    emit("gdm_block_interpret_vs_xla", 0.0, f"max_err={block_err:.2e}")
+    out["equivalence"] = {"adaln_err": adaln_err, "flash_err": flash_err,
+                          "block_err": block_err}
+    assert adaln_err < 2e-5 and flash_err < 2e-5, "kernel oracle mismatch"
+    assert block_err < 1e-6, "interpret/xla denoise-block mismatch"
+
+    # -- impl auto-resolution: no hardcoded "xla" left in serving ----------
+    want = "pallas" if backend == "tpu" else "xla"
+    assert ops.resolve_impl("auto") == want
+    from repro.serving.gdm_service import GDMService
+    if not os.environ.get("REPRO_GDM_IMPL"):
+        svc = GDMService(jax.random.PRNGKey(0), num_blocks=2, ref_prompts=2)
+        assert svc.impl == "auto" and svc.resolved_impl == want
+    emit("gdm_impl_auto", 0.0, f"auto->{want} on {backend}")
+    out["impl_auto"] = want
+    return out
+
+
+if __name__ == "__main__":
+    run()

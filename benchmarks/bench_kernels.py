@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, run_meta, timed
 from repro.kernels import ops, ref
 
 RNG = np.random.default_rng(0)
@@ -18,7 +18,7 @@ def arr(*shape, dtype=jnp.float32):
 
 
 def run() -> dict:
-    out = {}
+    out = {"meta": run_meta()}
     # flash attention (prefill-shaped)
     q, k, v = arr(2, 256, 8, 64), arr(2, 256, 2, 64), arr(2, 256, 2, 64)
     _, us = timed(lambda: jax.block_until_ready(
@@ -49,6 +49,22 @@ def run() -> dict:
     emit("kernel_rmsnorm_xla_8x1024x512", us, "fused norm")
     out["rms_us"] = us
 
+    # adaLN modulated norm (DiT denoise block, fused epilogue variant)
+    xa = arr(8, 256, 512)
+    sh, scm, g = arr(8, 512), arr(8, 512), arr(8, 512)
+    w, b = arr(512), arr(512)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.adaln_norm(xa, sh, scm, w, b, g, xa, impl="xla")))
+    emit("kernel_adaln_norm_xla_8x256x512", us, "DiT adaLN + gated residual")
+    out["adaln_us"] = us
+
+    # non-causal flash attention (DiT latent-patch shape)
+    qn, kn, vn = arr(8, 64, 8, 64), arr(8, 64, 8, 64), arr(8, 64, 8, 64)
+    _, us = timed(lambda: jax.block_until_ready(
+        ops.flash_attention(qn, kn, vn, causal=False, impl="xla")))
+    emit("kernel_flash_attention_noncausal_xla_b8s64", us, "DiT full attn")
+    out["flash_noncausal_us"] = us
+
     # interpret-mode equivalence spot check (the real kernel body)
     qs, ks, vs = arr(1, 32, 4, 32), arr(1, 32, 2, 32), arr(1, 32, 2, 32)
     got = ops.flash_attention(qs, ks, vs, impl="interpret", block_q=8, block_k=8)
@@ -56,6 +72,15 @@ def run() -> dict:
     err = float(jnp.max(jnp.abs(got - want)))
     emit("kernel_flash_attention_interpret_check", 0.0, f"max_err={err:.2e}")
     out["interpret_err"] = err
+
+    # adaLN interpret equivalence (the real Pallas kernel body)
+    xs, shs, scs = arr(2, 16, 64), arr(2, 64), arr(2, 64)
+    ws, bs = arr(64), arr(64)
+    got = ops.adaln_norm(xs, shs, scs, ws, bs, impl="interpret", block_rows=8)
+    want = ref.adaln_norm(xs, shs, scs, ws, bs)
+    err = float(jnp.max(jnp.abs(got - want)))
+    emit("kernel_adaln_norm_interpret_check", 0.0, f"max_err={err:.2e}")
+    out["adaln_interpret_err"] = err
     return out
 
 

@@ -48,6 +48,9 @@ BENCHES = {
     "scenarios": ("benchmarks.bench_scenarios",
                   "named-scenario suite sweep (repro.sim.scenarios)"),
     "kernels": ("benchmarks.bench_kernels", "Pallas kernel micro-bench"),
+    "gdm_kernels": ("benchmarks.bench_gdm_kernels",
+                    "DiT serving hot path: (impl x bucket) block latency, "
+                    "scan-vs-unroll compile time, HLO cost, oracle checks"),
     "serving": ("benchmarks.bench_serving",
                 "policy-driven serving on real GDM blocks "
                 "(learned/greedy/random/fixed-chain per scenario)"),

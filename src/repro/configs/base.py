@@ -80,6 +80,8 @@ class ModelConfig:
     # GDM service ----------------------------------------------------------
     gdm_blocks: int = 0           # B in the paper; >0 marks a GDM service
     latent_hw: int = 0            # latent spatial size (patch grid)
+    gdm_impl: str = "auto"        # denoise kernel impl: auto|pallas|interpret|xla
+                                  # (overridable per service / via REPRO_GDM_IMPL)
 
     # -- derived -----------------------------------------------------------
     @property

@@ -200,18 +200,19 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                         workload_params: Optional[Dict] = None,
                         fault_schedule: str = "none",
                         fault_params: Optional[Dict] = None,
-                        recovery=None):
+                        recovery=None, impl: Optional[str] = None):
     """The closed loop at fleet scale: sim-train ONE placement variant
     against the measured Ω curves, then deploy it to every cell of a
     C-cell cluster and serve the fleet workload (optionally under an
-    injected fault schedule + recovery policy)."""
+    injected fault schedule + recovery policy).  ``impl`` picks the DiT
+    denoise kernel path (default: ``REPRO_GDM_IMPL``, then ``"auto"``)."""
     from repro.core.policy import LearnedPolicy
     if services is None:
         import jax
         from repro.serving.gdm_service import make_gdm_services
         services, omega = make_gdm_services(
             cfg.num_services, jax.random.PRNGKey(seed),
-            num_blocks=cfg.max_blocks)
+            num_blocks=cfg.max_blocks, impl=impl)
     else:
         omega = np.stack([services[s].omega
                           for s in range(cfg.num_services)])
@@ -233,7 +234,8 @@ def serve_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                   num_envs: Optional[int] = None,
                   steps_per_block: int = 1,
                   services: Optional[Dict[int, object]] = None,
-                  early_exit: bool = True) -> Dict[str, float]:
+                  early_exit: bool = True,
+                  impl: Optional[str] = None) -> Dict[str, float]:
     """The paper's closed loop: sim-train a placement variant, deploy it on
     the real-model serving path, serve the scenario's request trace.
 
@@ -248,7 +250,8 @@ def serve_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
         from repro.serving.gdm_service import make_gdm_services
         services, omega = make_gdm_services(
             cfg.num_services, jax.random.PRNGKey(seed),
-            num_blocks=cfg.max_blocks, steps_per_block=steps_per_block)
+            num_blocks=cfg.max_blocks, steps_per_block=steps_per_block,
+            impl=impl)
     else:
         omega = np.stack([services[s].omega
                           for s in range(cfg.num_services)])

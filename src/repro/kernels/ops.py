@@ -18,16 +18,21 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.adaln_norm import adaln_norm_pallas
 from repro.kernels.decode_attention import decode_attention_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.rmsnorm import rmsnorm_pallas
 from repro.kernels.ssm_scan import ssm_scan_pallas
 
 
-def _resolve(impl: str) -> str:
+def resolve_impl(impl: str) -> str:
+    """Resolve ``"auto"`` for this host: Pallas on TPU, XLA oracle elsewhere."""
     if impl != "auto":
         return impl
     return "pallas" if jax.default_backend() == "tpu" else "xla"
+
+
+_resolve = resolve_impl          # internal alias (pre-PR-8 name)
 
 
 # ---------------------------------------------------------------------------
@@ -74,6 +79,29 @@ def ssm_scan(u, delta, a, bmat, cmat, d, *, impl: str = "auto",
     block_d = _largest_divisor_leq(din, block_d)
     return ssm_scan_pallas(u, delta, a, bmat, cmat, d, chunk=chunk,
                            block_d=block_d, interpret=(mode == "interpret"))
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "impl", "block_rows"))
+def adaln_norm(x, shift, scale, weight, bias, gate=None, residual=None, *,
+               eps: float = 1e-5, impl: str = "auto", block_rows: int = 128):
+    """Fused DiT adaLN: LayerNorm + shift/scale modulation.
+
+    x: (B, S, d); shift/scale/gate: (B, d) or (B, 1, d); weight/bias: (d,).
+    With ``gate``+``residual`` the previous sublayer's gated residual add is
+    fused in first and ``(y, new_residual)`` is returned.
+    """
+    b, _, d = x.shape
+    shift, scale = shift.reshape(b, d), scale.reshape(b, d)
+    if gate is not None:
+        gate = gate.reshape(b, d)
+    mode = _resolve(impl)
+    if mode == "xla":
+        return ref.adaln_norm(x, shift, scale, weight, bias, gate=gate,
+                              residual=residual, eps=eps)
+    return adaln_norm_pallas(x, shift, scale, weight, bias, gate=gate,
+                             residual=residual, eps=eps,
+                             block_rows=block_rows,
+                             interpret=(mode == "interpret"))
 
 
 @functools.partial(jax.jit, static_argnames=("eps", "impl", "block_rows"))

@@ -128,3 +128,32 @@ def rmsnorm(x, scale, eps: float = 1e-6):
     x32 = x.astype(jnp.float32)
     var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
     return (x32 * (var + eps) ** -0.5 * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# adaln_norm oracle: LayerNorm + adaLN shift/scale (+ gated residual epilogue)
+# ---------------------------------------------------------------------------
+
+def adaln_norm(x, shift, scale, weight, bias, gate=None, residual=None,
+               *, eps: float = 1e-5):
+    """Fused DiT adaLN: ``LN(x) * (1 + scale) + shift``.
+
+    x/residual: (B, S, d); shift/scale/gate: (B, d) per-batch modulation
+    vectors; weight/bias: (d,) LayerNorm affine params.  With ``gate`` and
+    ``residual`` the previous sublayer's gated residual add is folded in
+    first (``r = residual + gate * x``) and ``(y, r)`` is returned — the op
+    ordering matches the unfused ``layernorm_apply(...) * (1 + sc) + sh``
+    chain exactly (float32 throughout, cast once at the end).
+    """
+    x32 = x.astype(jnp.float32)
+    if residual is not None:
+        x32 = residual.astype(jnp.float32) \
+            + gate.astype(jnp.float32)[:, None, :] * x32
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mean) * (var + eps) ** -0.5
+    y = y * weight.astype(jnp.float32) + bias.astype(jnp.float32)
+    y = y * (1.0 + scale.astype(jnp.float32)[:, None, :]) \
+        + shift.astype(jnp.float32)[:, None, :]
+    y = y.astype(x.dtype)
+    return y if residual is None else (y, x32.astype(x.dtype))

@@ -2,11 +2,14 @@ from repro.models.gdm import (  # noqa: F401
     gdm_denoise,
     gdm_loss,
     init_gdm,
+    migrate_gdm_params,
     quality_per_block,
     run_block,
     run_block_batched,
     sample_chain,
     ssim_proxy,
+    stack_layer_params,
+    unstack_layer_params,
 )
 from repro.models.lm import (  # noqa: F401
     LayerSpec,

@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops
 from repro.nn import (
     attention_apply,
     attention_init,
@@ -61,25 +62,93 @@ def init_gdm(key, cfg: ModelConfig, *, dtype=jnp.float32):
         "prompt_embed": embedding_init(ks[5], cfg.vocab_size, d, dtype=dtype),
         "final_norm": layernorm_init(d, dtype),
         "patch_out": dense_init(ks[6], d, LATENT_CHANNELS, dtype=dtype),
-        "layers": layers,
+        "layers": stack_layer_params(layers),
     }
     return params
 
 
+# -- layer-stack layout helpers (leading-axis pytree <-> legacy list) ---------
+
+def stack_layer_params(layers):
+    """Stack a per-layer list of param dicts into one leading-axis pytree.
+
+    The stacked layout is what :func:`gdm_denoise` scans over — one traced
+    layer body instead of ``num_layers`` unrolled copies.
+    """
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *list(layers))
+
+
+def unstack_layer_params(layers):
+    """Inverse of :func:`stack_layer_params` (leading axis -> list)."""
+    n = jax.tree_util.tree_leaves(layers)[0].shape[0]
+    return [jax.tree_util.tree_map(lambda a: a[i], layers) for i in range(n)]
+
+
+def migrate_gdm_params(params):
+    """One-shot migration: legacy per-layer param LIST -> stacked layout.
+
+    Checkpoints written before the layer-scan refactor stored
+    ``params["layers"]`` as a Python list of per-layer dicts; restore such a
+    checkpoint into its legacy template, then pass it through here.  Already
+    -stacked params pass through unchanged.
+    """
+    layers = params.get("layers")
+    if isinstance(layers, (list, tuple)):
+        params = dict(params, layers=stack_layer_params(layers))
+    return params
+
+
+@functools.lru_cache(maxsize=None)
+def _timestep_freqs(half: int):
+    """Sinusoidal frequency table — a cached HOST constant (numpy, never a
+    traced value) so jitted callers (including the per-step denoise inside
+    ``run_block_batched``'s fori_loop) capture it as a literal instead of
+    re-tracing exp/arange every step."""
+    import numpy as np
+    return np.exp(-np.log(10_000.0)
+                  * np.arange(half, dtype=np.float32) / half)
+
+
 def _timestep_embedding(t, dim: int = 256):
     """Sinusoidal timestep embedding.  t: (B,) float."""
-    half = dim // 2
-    freqs = jnp.exp(-jnp.log(10_000.0) * jnp.arange(half, dtype=jnp.float32) / half)
+    freqs = _timestep_freqs(dim // 2)
     args = t.astype(jnp.float32)[:, None] * freqs[None]
     return jnp.concatenate([jnp.cos(args), jnp.sin(args)], axis=-1)
 
 
+def _dit_layer(layer, x, cond, cfg: ModelConfig, *, impl: str):
+    """One DiT block on residual stream ``x`` (B, S, d).
+
+    Norm + adaLN modulation run through the fused Pallas ``adaln_norm``
+    kernel (:mod:`repro.kernels.adaln_norm`): the attention sublayer's gated
+    residual add is folded into the second norm's tile pass, so the stream
+    makes two HBM round trips per layer instead of five.  Attention routes
+    through ``ops.flash_attention`` (non-causal, no rope) via
+    ``attention_apply``.
+    """
+    mods = dense_apply(layer["ada"], jax.nn.silu(cond))
+    sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mods, 6, axis=-1)
+    h = ops.adaln_norm(x, sh1, sc1, layer["norm1"]["scale"],
+                       layer["norm1"]["bias"], impl=impl)
+    h = attention_apply(layer["attn"], h, cfg=cfg, causal=False, rope=False,
+                        impl=impl)
+    h, x = ops.adaln_norm(h, sh2, sc2, layer["norm2"]["scale"],
+                          layer["norm2"]["bias"], g1, x, impl=impl)
+    h = gelu_mlp_apply(layer["mlp"], h)
+    return x + g2 * h
+
+
 def gdm_denoise(params, latent, t, prompt, cfg: ModelConfig, *,
-                impl: str = "auto"):
+                impl: str = "auto", unroll: bool = False):
     """Predict noise eps for latent x_t.
 
     latent: (B, H*W, C); t: (B,) int32; prompt: (B, P) int32 token ids.
     Returns eps with the latent's shape.
+
+    The layer stack is one ``lax.scan`` over the stacked (leading-axis)
+    layer params — one traced layer body per compile instead of
+    ``num_layers`` unrolled copies.  ``unroll=True`` keeps the legacy
+    Python loop (the equivalence/compile-time baseline).
     """
     x = dense_apply(params["patch_in"], latent) + params["pos"].astype(latent.dtype)
     temb = dense_apply(params["t_embed"], _timestep_embedding(t).astype(x.dtype))
@@ -87,16 +156,14 @@ def gdm_denoise(params, latent, t, prompt, cfg: ModelConfig, *,
     pemb = jnp.take(params["prompt_embed"]["table"], prompt, axis=0).mean(axis=1)
     cond = (temb + pemb.astype(temb.dtype))[:, None]        # (B, 1, d)
 
-    for layer in params["layers"]:
-        mods = dense_apply(layer["ada"], jax.nn.silu(cond))
-        sh1, sc1, g1, sh2, sc2, g2 = jnp.split(mods, 6, axis=-1)
-        h = layernorm_apply(layer["norm1"], x) * (1 + sc1) + sh1
-        h = attention_apply(layer["attn"], h, cfg=cfg, causal=False, rope=False,
-                            impl=impl)
-        x = x + g1 * h
-        h = layernorm_apply(layer["norm2"], x) * (1 + sc2) + sh2
-        h = gelu_mlp_apply(layer["mlp"], h)
-        x = x + g2 * h
+    if unroll:
+        for layer in unstack_layer_params(params["layers"]):
+            x = _dit_layer(layer, x, cond, cfg, impl=impl)
+    else:
+        def body(carry, layer):
+            return _dit_layer(layer, carry, cond, cfg, impl=impl), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"])
 
     x = layernorm_apply(params["final_norm"], x)
     return dense_apply(params["patch_out"], x)
@@ -113,6 +180,12 @@ def make_schedule(num_steps: int, beta_min: float = 1e-4, beta_max: float = 0.02
     return {"betas": betas, "alphas": alphas, "alpha_bar": alpha_bar}
 
 
+def _ddim_update(latent, eps, ab_t, ab_prev):
+    """The DDIM posterior update given the gathered schedule terms."""
+    x0 = (latent - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
+    return jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1 - ab_prev) * eps, x0
+
+
 def ddim_step(params, latent, step_idx, prompt, cfg: ModelConfig, schedule, *,
               total_steps: int, impl: str = "auto"):
     """One deterministic DDIM step from t=step_idx to step_idx-1.
@@ -125,13 +198,12 @@ def ddim_step(params, latent, step_idx, prompt, cfg: ModelConfig, schedule, *,
     ab = schedule["alpha_bar"]
     ab_t = ab[t][:, None, None]
     ab_prev = jnp.where(t > 0, ab[jnp.maximum(t - 1, 0)], 1.0)[:, None, None]
-    x0 = (latent - jnp.sqrt(1 - ab_t) * eps) / jnp.sqrt(ab_t)
-    return jnp.sqrt(ab_prev) * x0 + jnp.sqrt(1 - ab_prev) * eps, x0
+    return _ddim_update(latent, eps, ab_t, ab_prev)
 
 
 def run_block_batched(params, latent, prompt, cfg: ModelConfig, schedule,
                       block_idx, *, steps_per_block: int, total_steps: int,
-                      impl: str = "auto"):
+                      impl: str = "auto", unroll_layers: bool = False):
     """Advance each sample of a mixed batch through ITS OWN block.
 
     ``block_idx``: (B,) int — sample b executes block ``block_idx[b]``
@@ -141,14 +213,23 @@ def run_block_batched(params, latent, prompt, cfg: ModelConfig, schedule,
     run as ONE call, even when they sit at different chain depths.
     Returns (latent after the block, current x0 estimate), like
     :func:`run_block`.
+
+    The whole (steps_per_block, B) schedule slice — per-step timesteps and
+    both ``alpha_bar`` gathers — is precomputed ONCE per call; the fori_loop
+    body only dynamic-slices row i instead of re-gathering per step.
     """
     start = total_steps - 1 - jnp.asarray(block_idx, jnp.int32) * steps_per_block
+    t_all = start[None, :] - jnp.arange(steps_per_block, dtype=jnp.int32)[:, None]
+    ab = schedule["alpha_bar"]
+    ab_t_all = ab[t_all]                                    # (spb, B)
+    ab_prev_all = jnp.where(t_all > 0, ab[jnp.maximum(t_all - 1, 0)], 1.0)
 
     def body(i, carry):
         lat, _ = carry
-        lat, x0 = ddim_step(params, lat, start - i, prompt, cfg, schedule,
-                            total_steps=total_steps, impl=impl)
-        return lat, x0
+        eps = gdm_denoise(params, lat, t_all[i], prompt, cfg, impl=impl,
+                          unroll=unroll_layers)
+        return _ddim_update(lat, eps, ab_t_all[i][:, None, None],
+                            ab_prev_all[i][:, None, None])
 
     return jax.lax.fori_loop(0, steps_per_block, body,
                              (latent, jnp.zeros_like(latent)))

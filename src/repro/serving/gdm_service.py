@@ -20,6 +20,7 @@ block across nodes.  Two contracts back the engine:
 """
 from __future__ import annotations
 
+import os
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -28,8 +29,25 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.configs.base import ModelConfig
+from repro.kernels.ops import resolve_impl
 from repro.models.gdm import (LATENT_CHANNELS, init_gdm, make_schedule,
                               quality_per_block, run_block_batched)
+
+
+def default_gdm_impl(impl: Optional[str], cfg: ModelConfig) -> str:
+    """Resolve the denoise kernel impl for a service.
+
+    Precedence: explicit ``impl`` argument > ``REPRO_GDM_IMPL`` env knob >
+    ``ModelConfig.gdm_impl`` (default ``"auto"``).  ``"auto"`` picks Pallas
+    on TPU and the XLA oracle elsewhere (``repro.kernels.ops.resolve_impl``)
+    — serving no longer hardcodes ``"xla"``.
+    """
+    if impl:
+        return impl
+    env = os.environ.get("REPRO_GDM_IMPL", "").strip()
+    if env:
+        return env
+    return getattr(cfg, "gdm_impl", "auto") or "auto"
 
 
 class GDMService:
@@ -37,11 +55,14 @@ class GDMService:
 
     def __init__(self, key, *, num_blocks: int = 4, steps_per_block: int = 1,
                  model_cfg: Optional[ModelConfig] = None, prompt_len: int = 8,
-                 ref_prompts: int = 4, mesh=None, batch_axis: str = "batch"):
+                 ref_prompts: int = 4, mesh=None, batch_axis: str = "batch",
+                 impl: Optional[str] = None):
         self.cfg = model_cfg or get_config("gdm-dit").reduced()
         self.num_blocks = num_blocks
         self.steps_per_block = steps_per_block
         self.prompt_len = prompt_len
+        self.impl = default_gdm_impl(impl, self.cfg)
+        self.resolved_impl = resolve_impl(self.impl)
         total = num_blocks * steps_per_block
         k_init, k_ref = jax.random.split(key)
         self.params = init_gdm(k_init, self.cfg)
@@ -50,40 +71,52 @@ class GDMService:
         # one mesh shards the stacked batch dim across devices (the DiT is
         # per-sample independent: pure data parallelism, zero communication)
         self.mesh = mesh
+        self._batch_axis = batch_axis
         self._ndev = 1 if mesh is None else mesh.shape[batch_axis]
         # persistent per-bucket host staging buffers (see run_batch)
         self._buffers: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] \
             = {}
+        # compiled block-call cache keyed by impl (benches flip impls on one
+        # service without recompiling the default hot path)
+        self._runners: Dict[str, object] = {}
+        self._runner = self._runner_for(self.impl)
 
+        # Ω(k): measured SSIM-vs-final per block (Fig. 1 protocol), forced
+        # monotone — measured curves are monotone in expectation only
+        prompts = jax.random.randint(k_ref, (ref_prompts, prompt_len), 2,
+                                     self.cfg.vocab_size)
+        q = np.asarray(quality_per_block(self.params, k_ref, prompts,
+                                         self.cfg, num_blocks=num_blocks,
+                                         steps_per_block=steps_per_block,
+                                         impl=self.impl))
+        self.omega = np.zeros(num_blocks + 1)
+        self.omega[1:] = np.maximum.accumulate(np.clip(q, 0.0, 1.0))
+
+    def _runner_for(self, impl: str):
+        """The jitted stacked-block call for ``impl`` (cached per impl)."""
+        runner = self._runners.get(impl)
+        if runner is not None:
+            return runner
         cfg, params, schedule = self.cfg, self.params, self.schedule
-        spb = steps_per_block
+        spb, total = self.steps_per_block, self.num_blocks * self.steps_per_block
 
         def _run(latent, prompt, block_idx):
             return run_block_batched(params, latent, prompt, cfg, schedule,
                                      block_idx, steps_per_block=spb,
-                                     total_steps=total, impl="xla")
+                                     total_steps=total, impl=impl)
 
         jit_kw = {}
         if jax.default_backend() in ("gpu", "tpu"):
             # donate the stacked latent: the block call overwrites it anyway
             # (no-op on CPU, where donation only warns)
             jit_kw["donate_argnums"] = (0,)
-        if mesh is not None:
+        if self.mesh is not None:
             from repro.distributed.sharding import batch_shardings
-            data, _ = batch_shardings(mesh, batch_axis)
+            data, _ = batch_shardings(self.mesh, self._batch_axis)
             jit_kw["in_shardings"] = (data, data, data)
             jit_kw["out_shardings"] = (data, data)
-        self._runner = jax.jit(_run, **jit_kw)
-
-        # Ω(k): measured SSIM-vs-final per block (Fig. 1 protocol), forced
-        # monotone — measured curves are monotone in expectation only
-        prompts = jax.random.randint(k_ref, (ref_prompts, prompt_len), 2,
-                                     self.cfg.vocab_size)
-        q = np.asarray(quality_per_block(params, k_ref, prompts, cfg,
-                                         num_blocks=num_blocks,
-                                         steps_per_block=spb, impl="xla"))
-        self.omega = np.zeros(num_blocks + 1)
-        self.omega[1:] = np.maximum.accumulate(np.clip(q, 0.0, 1.0))
+        runner = self._runners[impl] = jax.jit(_run, **jit_kw)
+        return runner
 
     # -- engine contracts -----------------------------------------------------
 
@@ -154,6 +187,7 @@ def make_gdm_services(num_services: int, key, *, num_blocks: int = 4,
                       steps_per_block: int = 1,
                       model_cfg: Optional[ModelConfig] = None,
                       mesh=None, batch_axis: str = "batch",
+                      impl: Optional[str] = None,
                       ) -> Tuple[Dict[int, GDMService], np.ndarray]:
     """One independent DiT per service + the stacked (S, B+1) Ω matrix.
 
@@ -166,6 +200,6 @@ def make_gdm_services(num_services: int, key, *, num_blocks: int = 4,
         services[s] = GDMService(k, num_blocks=num_blocks,
                                  steps_per_block=steps_per_block,
                                  model_cfg=model_cfg, mesh=mesh,
-                                 batch_axis=batch_axis)
+                                 batch_axis=batch_axis, impl=impl)
     omega = np.stack([services[s].omega for s in range(num_services)])
     return services, omega

@@ -79,6 +79,33 @@ def test_elastic_restore_dtype_cast(tmp_path):
     assert out["params"]["w"].dtype == jnp.bfloat16
 
 
+def test_legacy_gdm_layer_list_migration(tmp_path):
+    """Checkpoints from before the DiT layer-scan refactor stored
+    ``params["layers"]`` as a per-layer LIST (keys ``layers/[i]/...``).
+    Restore such a checkpoint into its legacy template, then
+    ``migrate_gdm_params`` stacks it into the scanned layout, leaf-exact."""
+    import jax
+    from repro.configs import get_config
+    from repro.models.gdm import (init_gdm, migrate_gdm_params,
+                                  unstack_layer_params)
+    cfg = get_config("gdm-dit").reduced()
+    params = init_gdm(jax.random.PRNGKey(0), cfg)
+    legacy = dict(params, layers=unstack_layer_params(params["layers"]))
+    save(str(tmp_path), 1, legacy)
+    # the on-disk keys are the legacy list paths
+    with open(tmp_path / "step_0000000001" / "manifest.json") as f:
+        keys = json.load(f)["keys"]
+    assert any(k.startswith("layers/[0]/") for k in keys)
+    template = jax.tree_util.tree_map(jnp.zeros_like, legacy)
+    restored, step = restore(str(tmp_path), template)
+    assert step == 1
+    migrated = migrate_gdm_params(restored)
+    jax.tree_util.tree_map(
+        lambda a, b: np.testing.assert_array_equal(np.asarray(a),
+                                                   np.asarray(b)),
+        migrated, params)
+
+
 def test_train_resume_after_simulated_crash(tmp_path):
     """End-to-end: trainer checkpoint -> 'crash' -> resume from latest."""
     from repro.launch import train as train_mod

@@ -47,6 +47,28 @@ def test_flash_attention_noncausal_and_window():
         np.testing.assert_allclose(out, want, atol=2e-5, rtol=2e-5)
 
 
+# DiT-shaped sweep: the denoiser's serving path is NON-causal full attention
+# over latent patch tokens (S = latent_hw**2, window=0) — shapes the causal
+# decode/prefill sweeps above never exercise.
+@pytest.mark.parametrize("b,s,h,kh,d", [
+    (1, 16, 4, 4, 16),          # gdm-dit reduced: hw=4, MHA
+    (4, 16, 4, 4, 16),          # serving batch bucket
+    (2, 64, 4, 2, 16),          # hw=8, GQA
+    (1, 64, 8, 1, 32),          # MQA, wider head
+    (3, 17, 4, 4, 16),          # non-divisible patch count (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_noncausal_dit_sweep(b, s, h, kh, d, dtype):
+    q, k, v = arr(b, s, h, d, dtype=dtype), arr(b, s, kh, d, dtype=dtype), \
+        arr(b, s, kh, d, dtype=dtype)
+    out = ops.flash_attention(q, k, v, causal=False, window=0,
+                              impl="interpret", block_q=8, block_k=8)
+    want = ref.attention(q, k, v, causal=False, window=0)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
 def test_flash_attention_causality_property():
     """Output at position t must not depend on inputs after t."""
     q, k, v = arr(1, 12, 2, 16), arr(1, 12, 2, 16), arr(1, 12, 2, 16)
@@ -146,8 +168,83 @@ def test_rmsnorm_matches_ref(shape, dtype):
                                np.asarray(want, np.float32), atol=tol, rtol=tol)
 
 
+# ---------------------------------------------------------------------------
+# adaln_norm (fused DiT LayerNorm + adaLN modulation)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,s,d", [
+    (1, 16, 64),                # gdm-dit reduced (hw=4, d_model=64)
+    (4, 16, 64),                # serving batch bucket
+    (2, 64, 96),                # hw=8, wider model
+    (2, 17, 64),                # non-divisible row count (padding path)
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adaln_norm_matches_ref(b, s, d, dtype):
+    x = arr(b, s, d, dtype=dtype)
+    sh, sc = arr(b, d, dtype=dtype, scale=0.3), arr(b, d, dtype=dtype, scale=0.3)
+    w, bias = arr(d), arr(d, scale=0.1)
+    out = ops.adaln_norm(x, sh, sc, w, bias, impl="interpret", block_rows=8)
+    want = ref.adaln_norm(x, sh, sc, w, bias)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize("b,s,d", [(1, 16, 64), (4, 16, 64), (2, 17, 96)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_adaln_norm_epilogue_matches_ref(b, s, d, dtype):
+    """Gated-residual epilogue: r = res + gate*h fused into the norm pass."""
+    h = arr(b, s, d, dtype=dtype)
+    res = arr(b, s, d, dtype=dtype)
+    sh, sc = arr(b, d, dtype=dtype, scale=0.3), arr(b, d, dtype=dtype, scale=0.3)
+    g = arr(b, d, dtype=dtype, scale=0.3)
+    w, bias = arr(d), arr(d, scale=0.1)
+    y, r = ops.adaln_norm(h, sh, sc, w, bias, g, res, impl="interpret",
+                          block_rows=8)
+    y_want, r_want = ref.adaln_norm(h, sh, sc, w, bias, gate=g, residual=res)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(y_want, np.float32), atol=tol, rtol=tol)
+    np.testing.assert_allclose(np.asarray(r, np.float32),
+                               np.asarray(r_want, np.float32), atol=tol, rtol=tol)
+
+
+def test_adaln_norm_accepts_b1d_modulation():
+    """(B, 1, d) modulation vectors (the DiT's native layout) are accepted."""
+    x, sh, sc = arr(2, 16, 64), arr(2, 1, 64), arr(2, 1, 64)
+    w, bias = arr(64), arr(64)
+    out = ops.adaln_norm(x, sh, sc, w, bias, impl="interpret", block_rows=8)
+    want = ref.adaln_norm(x, sh.reshape(2, 64), sc.reshape(2, 64), w, bias)
+    np.testing.assert_allclose(out, want, atol=1e-5, rtol=1e-5)
+
+
+def test_adaln_norm_oracle_matches_unfused_layernorm_chain():
+    """The oracle IS the composition gdm_denoise used pre-fusion:
+    layernorm_apply(...) * (1 + sc) + sh, and res + g*h for the epilogue."""
+    from repro.nn import layernorm_apply
+    x, res = arr(2, 16, 64), arr(2, 16, 64)
+    sh, sc, g = arr(2, 1, 64), arr(2, 1, 64), arr(2, 1, 64)
+    w, bias = arr(64), arr(64, scale=0.1)
+    p = {"scale": w, "bias": bias}
+    want = layernorm_apply(p, x) * (1 + sc) + sh
+    got = ops.adaln_norm(x, sh, sc, w, bias, impl="xla")
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+    r_want = res + g * x
+    y_want = layernorm_apply(p, r_want) * (1 + sc) + sh
+    y, r = ops.adaln_norm(x, sh, sc, w, bias, g, res, impl="xla")
+    np.testing.assert_allclose(r, r_want, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(y, y_want, atol=1e-6, rtol=1e-6)
+
+
 def test_ops_auto_dispatches_to_xla_on_cpu():
     q, k, v = arr(1, 8, 2, 16), arr(1, 8, 2, 16), arr(1, 8, 2, 16)
     out = ops.flash_attention(q, k, v, impl="auto")
     want = ref.attention(q, k, v)
     np.testing.assert_allclose(out, want, atol=1e-6)
+    x, sh, sc = arr(2, 8, 32), arr(2, 32), arr(2, 32)
+    w, bias = arr(32), arr(32)
+    out = ops.adaln_norm(x, sh, sc, w, bias, impl="auto")
+    want = ref.adaln_norm(x, sh, sc, w, bias)
+    np.testing.assert_allclose(out, want, atol=1e-6)
+    want_mode = "pallas" if jax.default_backend() == "tpu" else "xla"
+    assert ops.resolve_impl("auto") == want_mode
