@@ -15,6 +15,13 @@ objective; the JSON summary lands in ``BENCH_serving.json`` via
 ``benchmarks.run``.  Scenario list: ``--scenario a,b,c`` /
 ``REPRO_BENCH_SERVE_SCENARIOS`` (default paper-fig3, hetero-capacity,
 channel-starved).
+
+Each scenario also carries a small **scheduling axis** (ISSUE 9): the
+single-cell engine under the lockstep quantum reference vs the
+iteration-level continuous scheduler (``serving/scheduler.py``), greedy
+placement, stationary + flash-crowd workloads — ``run_meta()``-stamped
+rows under ``point["scheduling"]``.  The fleet-scale comparison (p95
+assert, deep-chain row, measured table) lives in ``bench_cluster``.
 """
 from __future__ import annotations
 
@@ -23,7 +30,7 @@ import time
 
 import jax
 
-from benchmarks.common import emit, save_csv, scaled
+from benchmarks.common import emit, run_meta, save_csv, scaled
 from repro.core.policy import GreedyPoAPolicy, LearnedPolicy, RandomPolicy
 from repro.experiments import serve_policy, train_variant
 from repro.serving.gdm_service import make_gdm_services
@@ -97,6 +104,31 @@ def run(scenario: str = "", train_eps: int = 0, frames: int = 0,
         point["learned_candidates"] = cand_objectives
         point["learned_ge_random"] = bool(
             point["learned"]["objective"] >= point["random"]["objective"])
+        # scheduling axis (ISSUE 9): the single-cell engine under the
+        # lockstep reference vs the iteration-level scheduler, greedy
+        # placement, stationary + flash-crowd workloads
+        from repro.serving.scheduler import SchedulerConfig
+        point["scheduling"] = {"meta": run_meta()}
+        for wname in ("stationary", "flash-crowd"):
+            wpoint = {}
+            for mode, sc in (("quantum", None),
+                             ("continuous", SchedulerConfig())):
+                t0 = time.perf_counter()
+                stats = serve_policy(cfg, GreedyPoAPolicy(), t,
+                                     services=services, workload=wname,
+                                     scheduling=mode, sched=sc)
+                us = (time.perf_counter() - t0) * 1e6 / t
+                wpoint[mode] = {
+                    "completed": stats["completed"],
+                    "mean_latency_frames": stats["mean_latency_frames"],
+                    "p95_latency_frames": stats["p95_latency_frames"],
+                    "objective": stats["objective"],
+                }
+                emit(f"serving_{name}_sched_{wname}_{mode}", us,
+                     f"lat={stats['mean_latency_frames']:.2f}f "
+                     f"p95={stats['p95_latency_frames']:.1f}f "
+                     f"obj={stats['objective']:.1f}")
+            point["scheduling"][wname] = wpoint
         out[name] = point
     save_csv("serving_engine",
              ["scenario", "policy", "completed", "submitted", "mean_q",

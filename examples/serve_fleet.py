@@ -64,6 +64,13 @@ def main(argv=None):
                     help="what happens to in-flight requests on dead nodes")
     ap.add_argument("--deadline", type=int, default=0,
                     help="per-request deadline in quanta (0 = none)")
+    ap.add_argument("--scheduling", default="quantum",
+                    choices=["quantum", "continuous"],
+                    help="lockstep reference vs iteration-level scheduler")
+    ap.add_argument("--skew", type=float, default=0.0,
+                    help="per-cell quantum skew in [0, 1) (continuous only)")
+    ap.add_argument("--backpressure-depth", type=float, default=0.0,
+                    help="admission throttle depth factor (0 = off)")
     args = ap.parse_args(argv)
 
     cfg = get_scenario(args.scenario)
@@ -99,9 +106,23 @@ def main(argv=None):
         print(f"  injecting {args.fault_schedule!r} faults "
               f"(recovery {args.recovery_mode!r}, deadline "
               f"{args.deadline or 'none'})")
+    sched = None
+    engine_cfg = None
+    if args.scheduling == "continuous":
+        from repro.serving import EngineConfig, SchedulerConfig
+        sched = SchedulerConfig(skew=args.skew,
+                                backpressure_depth=args.backpressure_depth,
+                                sub_quantum_arrivals=True)
+        engine_cfg = EngineConfig(
+            max_blocks=cfg.max_blocks, admission_slots=cfg.num_channels,
+            alpha=cfg.alpha, beta=cfg.beta, early_exit=True, seed=cfg.seed,
+            scheduling="continuous")
+        print(f"  continuous batching on (skew {args.skew}, "
+              f"backpressure depth {args.backpressure_depth or 'off'})")
     cluster = cluster_from_scenario(
         cfg, args.cells, services, policy_factory=factory,
-        telemetry=telemetry, ledger=ledger, recovery=recovery)
+        engine_cfg=engine_cfg, telemetry=telemetry, ledger=ledger,
+        recovery=recovery, sched=sched)
     fleet = fleet_trace(cfg, frames, args.cells, workload=args.workload,
                         seed=args.seed, handover_rate=args.handover_rate)
 

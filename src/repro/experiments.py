@@ -118,7 +118,8 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
                  services: Dict[int, object], seed: int = 0,
                  early_exit: bool = True, record: bool = False,
                  return_bridge: bool = False, workload: str = "stationary",
-                 workload_params: Optional[Dict] = None):
+                 workload_params: Optional[Dict] = None,
+                 scheduling: str = "quantum", sched=None):
     """Deploy one core policy on the serving engine for one scenario trace.
 
     Builds the engine from the scenario's world
@@ -129,7 +130,14 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
     replays the legacy ``request_trace`` exactly), and serves it.  Returns
     the serving summary (latency/quality/objective); with ``return_bridge``
     the bridge (and its recorded trace) comes back too.
+
+    ``scheduling`` selects the engine loop (``"quantum"`` is the lockstep
+    reference, ``"continuous"`` the iteration-level scheduler) and
+    ``sched`` is the :class:`repro.serving.scheduler.SchedulerConfig` for
+    the continuous path.
     """
+    import dataclasses
+
     from repro.serving.policy_bridge import (ServingPolicy,
                                              engine_from_scenario,
                                              serve_trace)
@@ -137,6 +145,11 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
 
     engine, world = engine_from_scenario(cfg, services,
                                          early_exit=early_exit)
+    if scheduling != "quantum":
+        engine.cfg = dataclasses.replace(engine.cfg, scheduling=scheduling)
+    if sched is not None:
+        from repro.serving.scheduler import attach_scheduler
+        attach_scheduler(engine, sched)
     bridge = ServingPolicy(policy, cfg, world=world, record=record)
     engine.placement_fn = bridge
     trace = workload_trace(cfg, frames, workload, seed=seed,
@@ -155,7 +168,8 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
                        ledger=None, workload_params: Optional[Dict] = None,
                        fault_schedule: str = "none",
                        fault_params: Optional[Dict] = None,
-                       recovery=None):
+                       recovery=None, scheduling: str = "quantum",
+                       sched=None):
     """Deploy policies on a C-cell fleet for one scenario × workload.
 
     ``policy_factory(cell) -> Policy`` builds each cell's placement policy
@@ -170,8 +184,12 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
     ``fault_schedule`` names a :mod:`repro.sim.faults` schedule injected
     over the run (``"none"``: no fault state is ever fed — the exact
     pre-fault driver); ``recovery`` is the per-cell
-    :class:`repro.serving.engine.RecoveryConfig`.
+    :class:`repro.serving.engine.RecoveryConfig`.  ``scheduling`` /
+    ``sched`` opt the fleet into the continuous-batching engine (see
+    :mod:`repro.serving.scheduler`).
     """
+    import dataclasses
+
     from repro.serving.cluster import cluster_from_scenario, serve_fleet
     from repro.sim.faults import fault_trace
     from repro.sim.workloads import fleet_trace
@@ -179,7 +197,10 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
     cluster = cluster_from_scenario(
         cfg, cells, services, policy_factory=policy_factory,
         early_exit=early_exit, stacked=stacked, telemetry=telemetry,
-        ledger=ledger, recovery=recovery)
+        ledger=ledger, recovery=recovery, sched=sched)
+    if scheduling != "quantum":
+        for eng in cluster.engines:
+            eng.cfg = dataclasses.replace(eng.cfg, scheduling=scheduling)
     fleet = fleet_trace(cfg, frames, cells, workload=workload, seed=seed,
                         handover_rate=handover_rate,
                         **(workload_params or {}))
@@ -200,7 +221,8 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                         workload_params: Optional[Dict] = None,
                         fault_schedule: str = "none",
                         fault_params: Optional[Dict] = None,
-                        recovery=None, impl: Optional[str] = None):
+                        recovery=None, impl: Optional[str] = None,
+                        scheduling: str = "quantum", sched=None):
     """The closed loop at fleet scale: sim-train ONE placement variant
     against the measured Ω curves, then deploy it to every cell of a
     C-cell cluster and serve the fleet workload (optionally under an
@@ -223,7 +245,7 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
         cells=cells, services=services, workload=workload, seed=seed,
         handover_rate=handover_rate, workload_params=workload_params,
         fault_schedule=fault_schedule, fault_params=fault_params,
-        recovery=recovery)
+        recovery=recovery, scheduling=scheduling, sched=sched)
     stats["train_episodes"] = train_eps
     return stats
 
@@ -235,7 +257,9 @@ def serve_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                   steps_per_block: int = 1,
                   services: Optional[Dict[int, object]] = None,
                   early_exit: bool = True,
-                  impl: Optional[str] = None) -> Dict[str, float]:
+                  impl: Optional[str] = None,
+                  scheduling: str = "quantum",
+                  sched=None) -> Dict[str, float]:
     """The paper's closed loop: sim-train a placement variant, deploy it on
     the real-model serving path, serve the scenario's request trace.
 
@@ -258,7 +282,8 @@ def serve_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
     ctrl = train_variant(cfg, variant, train_eps, seed=seed, engine=engine,
                          num_envs=num_envs, quality=omega)
     stats = serve_policy(cfg, LearnedPolicy(ctrl.agent, variant), frames,
-                         services=services, seed=seed, early_exit=early_exit)
+                         services=services, seed=seed, early_exit=early_exit,
+                         scheduling=scheduling, sched=sched)
     stats["train_episodes"] = train_eps
     return stats
 

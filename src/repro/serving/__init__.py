@@ -20,10 +20,17 @@ from repro.serving.kv_manager import (  # noqa: F401
     TransferLedger,
     state_nbytes,
 )
+from repro.serving.gdm_service import SlotBatch  # noqa: F401
 from repro.serving.policy_bridge import (  # noqa: F401
     ServingPolicy,
     engine_from_scenario,
     serve_trace,
+)
+from repro.serving.scheduler import (  # noqa: F401
+    SchedulerConfig,
+    attach_scheduler,
+    continuous_step,
+    serve_fleet_continuous,
 )
 from repro.serving.telemetry import (  # noqa: F401
     SCHEMA_VERSION,

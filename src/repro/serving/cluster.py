@@ -135,8 +135,34 @@ class ClusterEngine:
         src, dst = self.engines[ev.src_cell], self.engines[ev.dst_cell]
         req = next((r for r in src.active
                     if r.ue == ev.ue and not r.done), None)
-        if req is None:                          # nothing in flight: no-op
-            return False
+        if req is None:
+            # pending — not just active — requests follow their UE (ISSUE
+            # 9): a queued request re-queues in the destination cell at the
+            # UE's new PoA.  No latents have shipped (uplink is charged at
+            # first placement, from the new cell), so the move itself is
+            # free — but it still counts as an applied handover and the
+            # ledger records a zero-cost, zero-byte row so handover rows
+            # keep matching handovers_applied.
+            pending = next((r for r in src.pending
+                            if r.ue == ev.ue and not r.done), None)
+            if pending is None:                  # nothing in flight: no-op
+                return False
+            busy = any(r.ue == ev.ue for r in dst.active) or \
+                any(r.ue == ev.ue for r in dst.pending)
+            if busy:
+                return False
+            if dst._fault_active and not dst._node_up.any():
+                return False
+            src.pending.remove(pending)
+            pending.origin = ev.dst_origin
+            pending.node = -1
+            dst.pending.append(pending)
+            for ledger in {id(led): led for led in (dst.ledger, self.ledger)
+                           if led is not None}.values():
+                ledger.record(self.frame, pending.rid, "handover",
+                              ev.src_cell, ev.dst_cell, 0, 0.0)
+            self.handovers_applied += 1
+            return True
         busy = any(r.ue == ev.ue for r in dst.active) or \
             any(r.ue == ev.ue for r in dst.pending)
         if busy:                                 # destination slot occupied
@@ -240,6 +266,7 @@ class ClusterEngine:
             "deadline_misses": int(sum(c["deadline_misses"]
                                        for c in per_cell)),
             "failovers": int(sum(c["failovers"] for c in per_cell)),
+            "throttled": int(sum(c["throttled"] for c in per_cell)),
             "per_cell": per_cell,
         }
 
@@ -257,7 +284,7 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
                           telemetry: Optional[TelemetryLog] = None,
                           ledger: Optional[TransferLedger] = None,
                           mesh=None, batch_axis: str = "batch",
-                          recovery=None) -> ClusterEngine:
+                          recovery=None, sched=None) -> ClusterEngine:
     """Build a C-cell fleet for one named scenario.
 
     Every cell replicates the scenario's Table II world (same nodes, same
@@ -277,6 +304,12 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
     ``recovery`` (a :class:`repro.serving.engine.RecoveryConfig`) arms
     every cell's failure-recovery machinery; ``None`` (the default) keeps
     the pre-fault behaviour exactly.
+
+    ``sched`` (a :class:`repro.serving.scheduler.SchedulerConfig`) is
+    attached to every cell via
+    :func:`repro.serving.scheduler.attach_scheduler`; pair it with
+    ``engine_cfg.scheduling == "continuous"`` to opt into the
+    iteration-level scheduler.
     """
     engines = []
     for c in range(num_cells):
@@ -290,9 +323,13 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
             engine.placement_fn = ServingPolicy(policy_factory(c), cfg,
                                                 world=world)
         engines.append(engine)
-    return ClusterEngine(engines, services, stacked=stacked,
-                         handover_cost=handover_cost, ledger=ledger,
-                         mesh=mesh, batch_axis=batch_axis)
+    cluster = ClusterEngine(engines, services, stacked=stacked,
+                            handover_cost=handover_cost, ledger=ledger,
+                            mesh=mesh, batch_axis=batch_axis)
+    if sched is not None:
+        from repro.serving.scheduler import attach_scheduler
+        attach_scheduler(cluster, sched)
+    return cluster
 
 
 def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
@@ -309,7 +346,19 @@ def serve_fleet(cluster: ClusterEngine, fleet, services: Dict[int, object],
     fleet summary plus submission counts (and the per-frame per-cell step
     stats when ``collect_steps`` — the cell-equivalence harness reads
     those).
+
+    With ``EngineConfig.scheduling = "continuous"`` the fleet runs under
+    the iteration-level scheduler instead
+    (:func:`repro.serving.scheduler.serve_fleet_continuous`): same
+    submission rule and bookkeeping, but the lockstep cell loop becomes a
+    step-ordered event heap with per-cell quantum skew and requests
+    join/leave the in-flight batch at every block step.
     """
+    if cluster.engines[0].cfg.scheduling == "continuous":
+        from repro.serving.scheduler import serve_fleet_continuous
+        return serve_fleet_continuous(cluster, fleet, services, seed=seed,
+                                      collect_steps=collect_steps,
+                                      faults=faults)
     cfg = fleet.cfg
     u = cfg.num_ues
     c_n = cluster.num_cells

@@ -145,6 +145,16 @@ class EngineConfig:
     early_exit: bool = True          # adaptive chain length
     charge_downlink: bool = True     # C9 last leg: execution node -> UE PoA
     seed: int = 0
+    # "quantum": one placement pass + one block per request per quantum (the
+    # reference engine).  "continuous": the iteration-level scheduler in
+    # repro.serving.scheduler drives the quantum as a sequence of block
+    # steps (join/leave, per-cell skew, backpressure admission) — with those
+    # knobs disabled it is pinned frame-for-frame to the quantum engine.
+    scheduling: str = "quantum"
+
+    def __post_init__(self):
+        assert self.scheduling in ("quantum", "continuous"), \
+            f"unknown scheduling mode {self.scheduling!r}"
 
 
 @dataclasses.dataclass
@@ -231,7 +241,22 @@ class ServingEngine:
         self._legs_quantum = {"uplink": 0.0, "migration": 0.0,
                               "handover": 0.0, "downlink": 0.0,
                               "failover": 0.0}
-        self._quantum: Optional[tuple] = None       # begin_step scratch
+        # continuous-scheduling hooks (inert in quantum mode): the
+        # iteration-level scheduler attaches its config here, and ``skew``
+        # is this cell's quantum phase offset (stamped on telemetry events)
+        self.sched_cfg = None                       # SchedulerConfig | None
+        self.skew = 0.0
+        # per-quantum scratch shared by the phase methods (begin_quantum /
+        # plan_step / finish_step / end_quantum); quantum mode runs exactly
+        # one plan/finish step per quantum, continuous mode several
+        self._q_loads = np.zeros(len(nodes), dtype=int)
+        self._q_exec = 0.0
+        self._q_trans = 0.0
+        self._q_delivered: List[Request] = []
+        self._q_steps = 0
+        self._q_planned = 0                         # blocks planned (occupancy)
+        self._admit_node_taken = np.zeros(len(nodes), dtype=int)
+        self._step_scratch: Optional[List[Request]] = None
         # -- fault state (fed per quantum via set_fault_state; the healthy
         # defaults keep EVERY fault/recovery branch below strictly inert, so
         # the zero-fault path is frame-for-frame the pre-fault engine)
@@ -253,6 +278,14 @@ class ServingEngine:
         self._q_retries = 0
         self._q_deadline_misses = 0
         self._q_drops = 0
+        # continuous-batching telemetry (schema v3): requests joining /
+        # leaving the in-flight batch this quantum, admission throttles
+        # under backpressure, and the rids currently holding a batch slot
+        self.throttled_total = 0
+        self._q_joins = 0
+        self._q_leaves = 0
+        self._q_throttled = 0
+        self._batch_rids: set = set()
 
     # -- request lifecycle -----------------------------------------------------
 
@@ -336,7 +369,7 @@ class ServingEngine:
         diff = req.quality_threshold - req.quality
         return 1.0 / diff if diff > 0 else 1e-8
 
-    def _admit(self) -> None:
+    def _admit(self, fresh: bool = True) -> None:
         """Greedy MAC as admission control: threshold-closest first, C slots
         per NODE — matching the sim's per-BS MAC (each UE competes for the C
         uplink channels of ITS current cell), not the former top C·N global
@@ -346,19 +379,52 @@ class ServingEngine:
         With a :class:`RecoveryConfig`, denied requests retry under capped
         exponential backoff (a request backing off skips the competition
         entirely) and a dead entry node denies its whole queue for the
-        quantum; without one the pre-fault cadence is untouched."""
-        self._last_admitted = 0
-        self._last_dropped = 0
+        quantum; without one the pre-fault cadence is untouched.
+
+        The continuous scheduler calls this again between block steps
+        (mid-quantum joins): the per-node slot budget and the admitted /
+        dropped counters accumulate across the quantum via engine state
+        (``begin_quantum`` resets them), so a quantum never admits more than
+        the C channels either way.  With a
+        :class:`~repro.serving.scheduler.SchedulerConfig` attached and
+        ``backpressure_depth > 0``, a per-service live cap throttles
+        admission BEFORE the retry/backoff machinery — a throttled request
+        stays pending with its backoff state untouched, and requests older
+        than ``starvation_age`` quanta bypass the throttle (no starvation)."""
+        if fresh:                     # quantum-opening call: new slot budget
+            self._last_admitted = 0
+            self._last_dropped = 0
+            self._admit_node_taken[:] = 0
         if not self.pending:
             return
         rec = self.recovery
         slots = self.cfg.admission_slots
+        sched = self.sched_cfg
+        throttle = sched is not None and sched.backpressure_depth > 0
+        if throttle:
+            cap_total = max(int(self._caps_q.sum()), 1)
+            live_by_svc: Dict[int, int] = {}
+            for r in self.active:
+                live_by_svc[r.service] = live_by_svc.get(r.service, 0) + 1
+            n_svc = len({r.service for r in self.pending}
+                        | set(live_by_svc)) or 1
+            svc_cap = max(1, int(sched.backpressure_depth
+                                 * cap_total / n_svc))
         candidates = sorted(self.pending, key=self._priority, reverse=True)
         taken = set()
-        node_taken = np.zeros(len(self.nodes), dtype=int)
+        throttled = set()
+        node_taken = self._admit_node_taken
         for req in candidates:
             if rec is not None and req.next_retry_frame > self.frame:
                 continue                             # still backing off
+            if throttle:
+                age = self.frame - req.arrival_frame
+                if live_by_svc.get(req.service, 0) >= svc_cap \
+                        and age < sched.starvation_age:
+                    self._q_throttled += 1
+                    self.throttled_total += 1
+                    throttled.add(id(req))
+                    continue         # backpressure: no retry/backoff charge
             if rec is not None and req.retries > 0:
                 self.retries_total += 1              # one retry attempt
                 self._q_retries += 1
@@ -377,7 +443,10 @@ class ServingEngine:
             req.admitted = True
             self.active.append(req)
             taken.add(id(req))
-        self._last_admitted = len(taken)
+            if throttle:
+                live_by_svc[req.service] = \
+                    live_by_svc.get(req.service, 0) + 1
+        self._last_admitted += len(taken)
         # one O(n) rebuild preserving arrival order (the former per-request
         # deque.remove was O(n) per admitted request -> quadratic quanta)
         self.pending = deque(r for r in self.pending if id(r) not in taken)
@@ -385,8 +454,12 @@ class ServingEngine:
         # quantum) — re-counting the whole backlog every quantum would let
         # summed telemetry drops exceed total submissions; keyed by rid
         # (stable across the request's lifetime, unlike id()), pruned on
-        # completion/final-drop so a recycled rid is counted again
+        # completion/final-drop so a recycled rid is counted again.  A
+        # throttled request was deliberately deferred, not denied — it is
+        # reported via admission_throttled, not as a drop
         for r in self.pending:
+            if id(r) in throttled:
+                continue
             if r.rid not in self._denied_once:
                 self._denied_once.add(r.rid)
                 self._last_dropped += 1
@@ -415,6 +488,9 @@ class ServingEngine:
         req.outcome = outcome
         self.failed.append(req)
         self._denied_once.discard(req.rid)
+        if req.rid in self._batch_rids:              # vacate its batch slot
+            self._batch_rids.discard(req.rid)
+            self._q_leaves += 1
         if outcome == "drop":
             self.drops_total += 1
             self._q_drops += 1
@@ -492,33 +568,67 @@ class ServingEngine:
                 req.degraded_to = -1                    # pressure receded
 
     # -- one scheduling quantum (paper time frame) -------------------------------
+    #
+    # The quantum is decomposed into four phases so the iteration-level
+    # scheduler (repro.serving.scheduler) can run SEVERAL block steps per
+    # quantum — requests join/leave the in-flight batch between steps —
+    # while the quantum engine composes exactly one plan/finish step per
+    # quantum (begin_step / end_step below), byte-identical to the former
+    # monolithic halves:
+    #
+    #   begin_quantum()            admission + resilience pre-passes, scratch
+    #   plan_step() -> assigned    one placement pass (policy obs rebuilt)
+    #   finish_step(assigned)      delivery + downlink for executed blocks
+    #   end_quantum() -> stats     telemetry event + frame advance
+    #
+    # Node capacity (W_hat) and admission slots (C) are per-QUANTUM budgets
+    # shared across the quantum's block steps: loads accumulate in
+    # ``_q_loads`` and admission in ``_admit_node_taken``, so continuous
+    # mode never executes or admits more per quantum than the reference.
 
-    def begin_step(self) -> Dict[int, List[Request]]:
-        """First half of a quantum: admission, batched policy decision,
-        placement, and transmission charging.  Returns the ``node ->
-        requests`` execution plan; the caller (``step`` or the cluster's
-        stacked executor) advances every planned request by one block and
-        then calls :meth:`end_step`."""
-        # resilience pre-passes — strict no-ops for a healthy fault state
-        # and/or no RecoveryConfig, keeping the zero-fault path
-        # frame-for-frame identical to the pre-fault engine
+    def begin_quantum(self) -> None:
+        """Open a quantum: resilience pre-passes + admission (strict no-ops
+        for a healthy fault state and/or no RecoveryConfig, keeping the
+        zero-fault path frame-for-frame identical to the pre-fault engine),
+        then reset the per-quantum scratch the block steps accumulate into."""
         self._shed_deadlines()
         self._handle_node_failures()
         self._admit()
         self._degrade()
+        self._q_loads = np.zeros(len(self.nodes), dtype=int)
+        self._q_exec = 0.0
+        self._q_trans = 0.0
+        self._q_delivered = []
+        self._q_steps = 0
+        self._q_planned = 0
+
+    def plan_step(self, final: bool = True) -> Dict[int, List[Request]]:
+        """One placement pass over the active set: batched policy decision,
+        placement, and transmission charging.  Returns the ``node ->
+        requests`` execution plan; the caller advances every planned request
+        by one block and then calls :meth:`finish_step`.  Loads accumulate
+        against the per-quantum capacity budget, so later steps of a
+        continuous quantum only plan into whatever W_hat is left.
+
+        ``final``: this is the request's last placement chance this quantum
+        — a capacity-blocked request is delivered with whatever quality it
+        has ("deliver what exists") instead of waiting.  True for the
+        quantum engine's single pass and the continuous scheduler's first
+        step (sync equivalence); later continuous steps pass False, where
+        a blocked request just waits for the next quantum's budget."""
         # policy-driven placement hook: a placement_fn exposing
         # ``begin_quantum`` (the ServingPolicy bridge) computes one batched
-        # decision for every request slot from the quantum-start state; the
-        # per-request calls below then just read it back
+        # decision for every request slot — rebuilt on the scheduler's
+        # cadence (once per quantum in quantum mode, once per block step in
+        # continuous mode); the per-request calls below then just read it
         begin = getattr(self.placement_fn, "begin_quantum", None)
         if begin is not None:
             begin(self)
-        loads = np.zeros(len(self.nodes), dtype=int)
-        trans_cost = 0.0
+        loads = self._q_loads
         delivered: List[Request] = []
         assigned: Dict[int, List[Request]] = {}
 
-        # threshold-closest priority within the quantum (Algorithm 1 order)
+        # threshold-closest priority within the step (Algorithm 1 order)
         order = sorted(self.active, key=self._priority, reverse=True)
         for req in order:
             if req.done:
@@ -538,7 +648,7 @@ class ServingEngine:
             if self._fault_active and not self._node_up[target]:
                 continue                             # dead node: wait + retry
             if loads[target] >= self._caps_q[target]:
-                if req.blocks_done > 0 and self.cfg.early_exit:
+                if final and req.blocks_done > 0 and self.cfg.early_exit:
                     delivered.append(req)            # deliver what exists
                 continue
             # C9 transmission: uplink hop (the UE's CURRENT PoA -> first
@@ -558,7 +668,7 @@ class ServingEngine:
                 kind = "failover" if fo >= 0 else (
                     "migration" if req.node >= 0 else "uplink")
                 self._charge(req, kind, src, target, cost)
-                trans_cost += cost
+                self._q_trans += cost
             if fo >= 0:
                 req.failover_from = -1
                 req.failovers += 1
@@ -568,18 +678,28 @@ class ServingEngine:
             req.node = target
             assigned.setdefault(target, []).append(req)
 
-        self._quantum = (loads, delivered, trans_cost)
+        self._q_steps += 1
+        planned = sum(len(v) for v in assigned.values())
+        self._q_planned += planned
+        for reqs in assigned.values():               # batch joins (schema v3)
+            for req in reqs:
+                if req.rid not in self._batch_rids:
+                    self._batch_rids.add(req.rid)
+                    self._q_joins += 1
+        self._step_scratch = delivered
         return assigned
 
-    def end_step(self, assigned: Dict[int, List[Request]]) -> Dict[str, float]:
-        """Second half of a quantum: post-execution delivery checks, the
-        downlink leg, accounting, and the telemetry event."""
-        assert self._quantum is not None, "end_step without begin_step"
-        loads, delivered, trans_cost = self._quantum
-        self._quantum = None
-        exec_cost = 0.0
+    def finish_step(self, assigned: Dict[int, List[Request]]
+                    ) -> List[Request]:
+        """Close one block step: post-execution delivery checks, the
+        downlink leg, and completion bookkeeping — delivered requests vacate
+        their batch slot immediately (the continuous scheduler refills it
+        next step)."""
+        assert self._step_scratch is not None, "finish_step without plan_step"
+        delivered = self._step_scratch
+        self._step_scratch = None
         for target, reqs in assigned.items():
-            exec_cost += self.nodes[target].spec.exec_cost * len(reqs)
+            self._q_exec += self.nodes[target].spec.exec_cost * len(reqs)
             for req in reqs:
                 if req.blocks_done >= self._block_limit(req) or (
                         self.cfg.early_exit
@@ -595,7 +715,7 @@ class ServingEngine:
                 cost = float(self.y_hat[req.node, dst])
                 if cost != 0.0 or self.ledger is not None:
                     self._charge(req, "downlink", req.node, dst, cost)
-                trans_cost += cost
+                self._q_trans += cost
             req.done = True
             req.outcome = "completed"
             req.delivered_frame = self.frame
@@ -605,12 +725,25 @@ class ServingEngine:
             # leak an entry per rid, and a recycled rid must be counted
             # as a fresh admission drop
             self._denied_once.discard(req.rid)
+            if req.rid in self._batch_rids:          # batch leaves (schema v3)
+                self._batch_rids.discard(req.rid)
+                self._q_leaves += 1
+        self._q_delivered.extend(delivered)
+        return delivered
 
+    def end_quantum(self) -> Dict[str, float]:
+        """Close a quantum: the telemetry event, counter resets, and the
+        frame advance.  Returns the same per-quantum stats dict as the
+        former monolithic ``end_step``."""
+        loads = self._q_loads
+        delivered = self._q_delivered
         if self.telemetry is not None:
             # every leg is what was CHARGED this quantum (uplink/migration
             # at placement, handover by the cluster, downlink at delivery,
             # compute for the executed blocks) — one consistent per-quantum
             # decomposition whose totals match the transfer ledger
+            caps = int(self._caps_q.sum())
+            denom = self._q_steps * caps
             self.telemetry.record(QuantumEvent(
                 frame=self.frame, cell=self.cell_id,
                 queue_depth=len(self.pending), admitted=self._last_admitted,
@@ -618,31 +751,55 @@ class ServingEngine:
                 delivered=len(delivered),
                 node_load=[int(x) for x in loads],
                 node_capacity=[n.spec.capacity for n in self.nodes],
-                legs={"compute": exec_cost, **self._legs_quantum},
+                legs={"compute": self._q_exec, **self._legs_quantum},
                 node_down=int((~self._node_up).sum())
                 if self._fault_active else 0,
                 failovers=self._q_failovers, retries=self._q_retries,
                 deadline_misses=self._q_deadline_misses,
-                final_drops=self._q_drops))
+                final_drops=self._q_drops,
+                batch_join=self._q_joins, batch_leave=self._q_leaves,
+                slot_occupancy=float(self._q_planned / denom) if denom
+                else 0.0,
+                admission_throttled=self._q_throttled,
+                time=float(self.frame) + self.skew))
         self._last_dropped = 0
         self._legs_quantum = {k: 0.0 for k in self._legs_quantum}
         self._q_failovers = self._q_retries = 0
         self._q_deadline_misses = self._q_drops = 0
+        self._q_joins = self._q_leaves = self._q_throttled = 0
 
         self.prev_loads = loads
         self.frame += 1
-        return {
+        stats = {
             "frame": self.frame - 1,
             "delivered": len(delivered),
             "active": len(self.active),
             "pending": len(self.pending),
-            "exec_cost": exec_cost,
-            "trans_cost": trans_cost,
+            "exec_cost": self._q_exec,
+            "trans_cost": self._q_trans,
             "mean_quality": float(np.mean([r.quality for r in delivered]))
             if delivered else 0.0,
         }
+        self._q_delivered = []
+        return stats
+
+    def begin_step(self) -> Dict[int, List[Request]]:
+        """First half of a quantum-mode quantum: :meth:`begin_quantum` +
+        exactly one :meth:`plan_step` — the composition is what the cluster's
+        lock-step executor and the pre-decomposition tests run."""
+        self.begin_quantum()
+        return self.plan_step()
+
+    def end_step(self, assigned: Dict[int, List[Request]]) -> Dict[str, float]:
+        """Second half of a quantum-mode quantum: :meth:`finish_step` +
+        :meth:`end_quantum`."""
+        self.finish_step(assigned)
+        return self.end_quantum()
 
     def step(self) -> Dict[str, float]:
+        if self.cfg.scheduling == "continuous":
+            from repro.serving.scheduler import continuous_step
+            return continuous_step(self)
         assigned = self.begin_step()
         # deferred batched execution: ONE run_batch per (node, quantum) —
         # placement never reads intra-quantum block results, so this is
@@ -688,6 +845,9 @@ class ServingEngine:
             "retries": self.retries_total,
             "deadline_misses": self.deadline_misses_total,
             "failovers": self.failovers_total,
+            # admissions throttled by backpressure (zero without a
+            # SchedulerConfig arming backpressure_depth)
+            "throttled": self.throttled_total,
             "frames": frames,
         }
 

@@ -76,6 +76,7 @@ class GDMService:
         # persistent per-bucket host staging buffers (see run_batch)
         self._buffers: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] \
             = {}
+        self._slot_batch: Optional["SlotBatch"] = None
         # compiled block-call cache keyed by impl (benches flip impls on one
         # service without recompiling the default hot path)
         self._runners: Dict[str, object] = {}
@@ -120,6 +121,25 @@ class GDMService:
 
     # -- engine contracts -----------------------------------------------------
 
+    def _bucket(self, b: int) -> int:
+        """Batch-size bucket for ``b`` live rows: pow2 up to 8, then
+        multiples of 8 — bounded compile count with at most 7 wasted rows
+        on the big fleet-stacked batches (pow2 alone wastes up to ~2x
+        compute there); rounded up so the mesh batch axis always divides."""
+        assert b > 0
+        bucket = (1 << (b - 1).bit_length()) if b <= 8 else -(-b // 8) * 8
+        if bucket % self._ndev:
+            bucket = -(-bucket // self._ndev) * self._ndev
+        return bucket
+
+    def slot_batch(self) -> "SlotBatch":
+        """The slot-resident batch view for the iteration-level scheduler
+        (one per service, lazily built) — see :class:`SlotBatch`."""
+        sb = getattr(self, "_slot_batch", None)
+        if sb is None:
+            sb = self._slot_batch = SlotBatch(self)
+        return sb
+
     def init_state(self, rng: np.random.Generator) -> Dict:
         """Fresh request payload: noise latent + prompt token ids."""
         prompt = np.asarray(rng.integers(2, self.cfg.vocab_size,
@@ -147,13 +167,12 @@ class GDMService:
         measurable slice of the stacked path's step time.
         """
         b = len(states)
-        # pow2 up to 8, then multiples of 8: bounded compile count with at
-        # most 7 wasted rows on the big fleet-stacked batches (pow2 alone
-        # wastes up to ~2x compute there)
-        bucket = (1 << max(b - 1, 0).bit_length()) if b <= 8 \
-            else -(-b // 8) * 8
-        if bucket % self._ndev:
-            bucket = -(-bucket // self._ndev) * self._ndev
+        if b == 0:
+            # empty-batch edge (ISSUE 9): a continuous-scheduler step where
+            # every sample vacated must not issue a compiled call on a pad
+            # row or bump batch_calls
+            return [], self.omega[np.asarray(block_idxs, dtype=int) + 1]
+        bucket = self._bucket(b)
         buf = self._buffers.get(bucket)
         if buf is None:
             hw2 = self.cfg.latent_hw ** 2
@@ -181,6 +200,125 @@ class GDMService:
         """Scalar fallback (legacy per-request path): batch of one."""
         states, qs = self.run_batch([state], np.asarray([block_idx]))
         return states[0], float(qs[0])
+
+
+class SlotBatch:
+    """Slot-level batch mutation for the iteration-level scheduler.
+
+    ``run_batch`` restages every row on every call — right for the quantum
+    engine (one call per quantum), wasteful for the continuous scheduler,
+    which calls the service every *block step* with mostly the SAME
+    requests: under join/leave only the requests that joined or left since
+    the previous step change.  A :class:`SlotBatch` keeps requests
+    *resident* in persistent per-bucket staging buffers keyed by rid: a
+    continuing request's latent row is already staged (the previous step's
+    output was written back into its slot), so each step only writes the
+    rows that joined and frees the rows that left.
+
+    Correctness guards:
+
+    * **Residency check by identity** — a row is trusted only if the
+      request's current ``state["latent"]`` *is* the exact array this batch
+      returned for that rid last step; anything else (a recycled rid from
+      another run, a state mutated elsewhere, a fresh latent) restages the
+      row.  Handover keeps the state object, so residency survives
+      cross-cell moves (service instances are fleet-shared).
+    * **Masked write-back** — outputs are copied back only into the rows
+      planned THIS step; a resident-but-unplanned row keeps its staged
+      latent (the device call computes pad rows too, but per-sample
+      independence makes them inert and the write-back discards them).
+    * **Own buffers** — the resident buffers are separate from
+      ``run_batch``'s staging buffers (an interleaved ``run_batch`` call
+      would silently overwrite resident rows), but both share the service's
+      jitted runner and bucket sizes, so no new XLA compiles.
+
+    Bucket churn compacts: when the bucket for the live count changes,
+    every request restages into the new bucket's buffers (values are
+    identical to the rows it held — the write-back keeps staged rows equal
+    to the returned states).
+    """
+
+    def __init__(self, svc: GDMService):
+        self.svc = svc
+        self.bucket = 0
+        self.rows: Dict[int, int] = {}             # rid -> resident row
+        self._free: List[int] = []
+        self._latent_of: Dict[int, np.ndarray] = {}   # rid -> returned view
+        self._buffers: Dict[int, Tuple[np.ndarray, np.ndarray, np.ndarray]] \
+            = {}
+        self.device_calls = 0
+        self.rows_staged = 0                       # rows written (joins etc.)
+
+    def _buffers_for(self, bucket: int):
+        buf = self._buffers.get(bucket)
+        if buf is None:
+            hw2 = self.svc.cfg.latent_hw ** 2
+            buf = self._buffers[bucket] = (
+                np.zeros((bucket, hw2, LATENT_CHANNELS), np.float32),
+                np.zeros((bucket, self.svc.prompt_len), np.int32),
+                np.zeros((bucket,), np.int32))
+        return buf
+
+    def step(self, items: List[Tuple[int, Dict, int]]
+             ) -> Tuple[List[Dict], np.ndarray]:
+        """Advance one block step: ``items`` is ``[(rid, state, block_idx)]``
+        for every request planned this step.  Returns ``(states,
+        qualities)`` exactly like :meth:`GDMService.run_batch` (and
+        bit-identical to it — pinned by ``tests/test_scheduler.py``)."""
+        svc = self.svc
+        if not items:
+            return [], svc.omega[np.asarray([], dtype=int) + 1]
+        bucket = svc._bucket(len(items))
+        if bucket != self.bucket:
+            # bucket churn: compact into the new bucket's buffers (every
+            # row restages below via the residency check)
+            self.bucket = bucket
+            self.rows = {}
+            self._free = []
+            self._latent_of = {}
+        latent_buf, prompt_buf, idx_buf = self._buffers_for(bucket)
+        # leaves: free the rows of rids not planned this step (a request
+        # skipping a step loses residency and restages when it returns)
+        planned = {rid for rid, _, _ in items}
+        for rid in [r for r in self.rows if r not in planned]:
+            self._free.append(self.rows.pop(rid))
+            self._latent_of.pop(rid, None)
+        self._free.sort(reverse=True)              # reuse lowest rows first
+        # joins (and residency-check failures): stage their rows
+        next_row = len(self.rows) + len(self._free)
+        for rid, state, _ in items:
+            row = self.rows.get(rid)
+            resident = row is not None and \
+                state["latent"] is self._latent_of.get(rid)
+            if row is None:
+                if self._free:
+                    row = self._free.pop()
+                else:
+                    row = next_row
+                    next_row += 1
+                self.rows[rid] = row
+            if not resident:
+                latent_buf[row] = state["latent"]
+                prompt_buf[row] = state["prompt"]
+                self.rows_staged += 1
+        idx_buf[:] = 0                             # pad rows: valid block 0
+        for (rid, _, k) in items:
+            idx_buf[self.rows[rid]] = k
+        latent_out, x0 = svc._runner(latent_buf, prompt_buf, idx_buf)
+        svc.batch_calls += 1
+        self.device_calls += 1
+        latent_out = np.asarray(latent_out)
+        x0 = np.asarray(x0)
+        out: List[Dict] = []
+        for rid, state, _ in items:
+            row = self.rows[rid]
+            # masked write-back: only planned rows advance in the staging
+            # buffer; the returned view is the residency token for next step
+            latent_buf[row] = latent_out[row]
+            self._latent_of[rid] = latent_row = latent_out[row]
+            out.append(dict(state, latent=latent_row, x0=x0[row]))
+        ks = np.asarray([k for _, _, k in items], dtype=int)
+        return out, svc.omega[ks + 1]
 
 
 def make_gdm_services(num_services: int, key, *, num_blocks: int = 4,

@@ -17,10 +17,13 @@ the sim observation convention (eq. 7) once per quantum:
   n+1 = node n — so the null action flows through the engine's
   early-exit path unchanged.
 
-The engine calls ``begin_quantum(engine)`` once per scheduling quantum
-(batched decision for every slot from the quantum-start state, matching the
-sim's one-act-per-frame semantics); the per-request ``placement_fn`` calls
-then read the cached slot actions back.
+The engine calls ``begin_quantum(engine)`` once per *placement pass* —
+once per scheduling quantum in quantum mode (matching the sim's
+one-act-per-frame semantics), and once per block step under the
+iteration-level scheduler (``repro.serving.scheduler``), so the
+observation is rebuilt on the scheduler's cadence and mid-quantum
+joins/leaves are visible to the policy; the per-request ``placement_fn``
+calls then read the cached slot actions back.
 
 Also here: :func:`engine_from_scenario` (build a ServingEngine whose nodes
 ARE the sim world — same W_hat/eps draw, same Y_hat — so a policy trained
@@ -200,7 +203,8 @@ def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
 
 def submit_arrivals(engine: ServingEngine, trace, t: int,
                     outstanding: np.ndarray, services: Dict[int, object],
-                    rng: np.random.Generator, rid: int) -> int:
+                    rng: np.random.Generator, rid: int,
+                    ues: Optional[np.ndarray] = None) -> int:
     """Submit frame ``t``'s idle-gated arrivals from ``trace`` to ``engine``.
 
     THE one submission rule for single-cell (:func:`serve_trace`) and fleet
@@ -208,9 +212,18 @@ def submit_arrivals(engine: ServingEngine, trace, t: int,
     ``outstanding`` (mutated in place), per-(frame, UE) thresholds when the
     trace carries a heavy-tailed mix (``qbar_t``), request origin = the
     UE's PoA this frame.  Returns the next request id.
+
+    ``ues`` restricts submission to a UE subset (a boolean (U,) mask): the
+    continuous scheduler splits a frame's arrivals across block steps by
+    their sub-quantum offsets (``RequestTrace.arrival_offset``); submission
+    order stays UE-index order either way, so the rid stream is unchanged
+    when every subset is submitted in offset order.
     """
     qbar_t = getattr(trace, "qbar_t", None)
-    for ue in np.where(trace.arrivals[t] & ~outstanding)[0]:
+    fire = trace.arrivals[t] & ~outstanding
+    if ues is not None:
+        fire = fire & ues
+    for ue in np.where(fire)[0]:
         service = int(trace.service_of[ue])
         svc = services[service]
         state = svc.init_state(rng) if hasattr(svc, "init_state") else {}

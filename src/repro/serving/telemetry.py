@@ -12,11 +12,15 @@ external consumers read, and the round-trip (``to_json`` → ``validate`` →
 ``from_json``) is pinned by ``tests/test_workloads.py``.
 
 Schema versioning: documents carry an integer ``schema_version``
-(:data:`SCHEMA_VERSION`, currently 2).  Version 2 added the failure-counter
-fields; version-1 documents (no ``schema_version`` key) are still accepted
-by :meth:`TelemetryLog.from_json`, which validates them against the kept v1
-schema and zero-fills the missing counters — so older BENCH artifacts keep
-loading.
+(:data:`SCHEMA_VERSION`, currently 3).  Version 2 added the failure-counter
+fields; version 3 adds the continuous-batching fields (ISSUE 9): batch
+join/leave counts, slot occupancy across the quantum's block steps,
+admissions throttled by backpressure, and the skewed-quantum ``time``
+stamp (``frame + cell skew``).  Version-1 documents (no ``schema_version``
+key) and version-2 documents are still accepted by
+:meth:`TelemetryLog.from_json`, which validates them against the kept
+older schemas and zero-fills the missing fields — so older BENCH artifacts
+keep loading.
 
 No external schema library: :func:`validate` is a minimal checker for the
 subset of JSON Schema the contract uses (type / required / properties /
@@ -29,9 +33,11 @@ from typing import Dict, List
 
 import numpy as np
 
-TELEMETRY_VERSION = "repro.serving.telemetry/2"
+TELEMETRY_VERSION = "repro.serving.telemetry/3"
+TELEMETRY_VERSION_V2 = "repro.serving.telemetry/2"
 TELEMETRY_VERSION_V1 = "repro.serving.telemetry/1"
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
+SCHEMA_VERSION_V2 = 2
 
 # the v1 C9 legs; schema v2 added the "failover" leg (a migration forced
 # by node failure — see repro.serving.kv_manager.TRANSFER_KINDS)
@@ -41,6 +47,13 @@ LEGS = LEGS_V1 + ("failover",)
 # per-quantum resilience counters added in schema v2 (ISSUE 7)
 FAULT_FIELDS = ("node_down", "failovers", "retries", "deadline_misses",
                 "final_drops")
+
+# continuous-batching fields added in schema v3 (ISSUE 9): batch
+# join/leave counts, slot occupancy over the quantum's block steps,
+# backpressure throttles, and the skewed-quantum timestamp
+BATCH_INT_FIELDS = ("batch_join", "batch_leave", "admission_throttled")
+BATCH_NUM_FIELDS = ("slot_occupancy", "time")
+BATCH_FIELDS = BATCH_INT_FIELDS + BATCH_NUM_FIELDS
 
 _EVENT_FIELDS_V1 = ["frame", "cell", "queue_depth", "admitted", "dropped",
                     "active", "delivered", "node_load", "node_capacity",
@@ -67,7 +80,7 @@ _EVENT_SCHEMA_V1 = {
     },
 }
 
-_EVENT_SCHEMA = {
+_EVENT_SCHEMA_V2 = {
     "type": "object",
     "required": _EVENT_FIELDS_V1 + list(FAULT_FIELDS),
     "properties": {
@@ -81,12 +94,33 @@ _EVENT_SCHEMA = {
     },
 }
 
+_EVENT_SCHEMA = {
+    "type": "object",
+    "required": (_EVENT_FIELDS_V1 + list(FAULT_FIELDS)
+                 + list(BATCH_FIELDS)),
+    "properties": {
+        **_EVENT_SCHEMA_V2["properties"],
+        **{f: {"type": "integer"} for f in BATCH_INT_FIELDS},
+        **{f: {"type": "number"} for f in BATCH_NUM_FIELDS},
+    },
+}
+
 TELEMETRY_SCHEMA_V1 = {
     "type": "object",
     "required": ["version", "events"],
     "properties": {
         "version": {"type": "string"},
         "events": {"type": "array", "items": _EVENT_SCHEMA_V1},
+    },
+}
+
+TELEMETRY_SCHEMA_V2 = {
+    "type": "object",
+    "required": ["version", "schema_version", "events"],
+    "properties": {
+        "version": {"type": "string"},
+        "schema_version": {"type": "integer"},
+        "events": {"type": "array", "items": _EVENT_SCHEMA_V2},
     },
 }
 
@@ -155,6 +189,12 @@ class QuantumEvent:
     retries: int = 0                 # denied requests re-considered this quantum
     deadline_misses: int = 0         # requests shed past their deadline
     final_drops: int = 0             # requests terminally dropped (no failover)
+    # -- continuous-batching fields (schema v3) --------------------------------
+    batch_join: int = 0              # requests that joined the in-flight batch
+    batch_leave: int = 0             # requests that vacated their batch slot
+    admission_throttled: int = 0     # admissions deferred by backpressure
+    slot_occupancy: float = 0.0      # planned blocks / (steps * capacity)
+    time: float = 0.0                # skewed-quantum timestamp: frame + skew
 
     def to_json(self) -> dict:
         d = dataclasses.asdict(self)
@@ -163,6 +203,10 @@ class QuantumEvent:
         d["legs"] = {k: float(self.legs.get(k, 0.0)) for k in LEGS}
         for f in FAULT_FIELDS:
             d[f] = int(d[f])
+        for f in BATCH_INT_FIELDS:
+            d[f] = int(d[f])
+        for f in BATCH_NUM_FIELDS:
+            d[f] = float(d[f])
         return d
 
 
@@ -212,6 +256,15 @@ class TelemetryLog:
             "final_drops": int(sum(ev.final_drops for ev in self.events)),
             "max_node_down": int(max((ev.node_down for ev in self.events),
                                      default=0)),
+            # continuous-batching totals (ISSUE 9): joins == leaves on a
+            # drained run; throttles zero without backpressure armed
+            "batch_joins": int(sum(ev.batch_join for ev in self.events)),
+            "batch_leaves": int(sum(ev.batch_leave for ev in self.events)),
+            "admission_throttled": int(sum(ev.admission_throttled
+                                           for ev in self.events)),
+            "mean_slot_occupancy": float(np.mean(
+                [ev.slot_occupancy for ev in self.events]))
+            if self.events else 0.0,
         }
 
     # -- JSON round-trip -------------------------------------------------------
@@ -226,11 +279,17 @@ class TelemetryLog:
     @classmethod
     def from_json(cls, doc: dict) -> "TelemetryLog":
         """Load a telemetry document; v1 documents (no ``schema_version``)
-        are accepted with their missing failure counters zero-filled."""
+        and v2 documents are accepted with their missing fields zero-filled
+        (failure counters for v1, continuous-batching fields for both)."""
         version = doc.get("schema_version") if isinstance(doc, dict) else None
         if version is None:
             validate(doc, TELEMETRY_SCHEMA_V1)
             if doc["version"] != TELEMETRY_VERSION_V1:
+                raise ValueError(
+                    f"telemetry version mismatch: {doc['version']!r}")
+        elif version == SCHEMA_VERSION_V2:
+            validate(doc, TELEMETRY_SCHEMA_V2)
+            if doc["version"] != TELEMETRY_VERSION_V2:
                 raise ValueError(
                     f"telemetry version mismatch: {doc['version']!r}")
         else:
@@ -250,5 +309,7 @@ class TelemetryLog:
                 delivered=ev["delivered"], node_load=list(ev["node_load"]),
                 node_capacity=list(ev["node_capacity"]),
                 legs=dict(ev["legs"]),
-                **{f: int(ev.get(f, 0)) for f in FAULT_FIELDS}))
+                **{f: int(ev.get(f, 0)) for f in FAULT_FIELDS},
+                **{f: int(ev.get(f, 0)) for f in BATCH_INT_FIELDS},
+                **{f: float(ev.get(f, 0.0)) for f in BATCH_NUM_FIELDS}))
         return log

@@ -79,6 +79,12 @@ class RequestTrace:
     rates: Optional[np.ndarray] = None        # (T,) arrival prob per frame
     qbar_t: Optional[np.ndarray] = None       # (T, U) per-arrival thresholds
     workload: str = "stationary"
+    # sub-quantum arrival timestamps (repro.sim.workloads, ISSUE 9): an
+    # arrival at frame t with offset o lands at continuous time t + o.  The
+    # quantum engine ignores them (arrivals land at the frame boundary);
+    # the iteration-level scheduler (SchedulerConfig.sub_quantum_arrivals)
+    # admits the request at the matching block step inside the quantum.
+    arrival_offset: Optional[np.ndarray] = None   # (T, U) float in [0, 1)
 
 
 def request_trace(cfg: SimConfig, frames: int, seed: int = 0) -> RequestTrace:

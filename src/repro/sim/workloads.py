@@ -49,11 +49,13 @@ from repro.sim.scenarios import RequestTrace
 _WORKLOADS: Dict[str, Callable] = {}
 _DESCRIPTIONS: Dict[str, str] = {}
 
-# sub-stream tags: the envelope/mix stream and the handover stream must not
-# perturb the trace's arrival/mobility stream (keyed by (cfg.seed, seed)
-# alone), or stationary would stop replaying request_trace exactly
+# sub-stream tags: the envelope/mix stream, the handover stream, and the
+# sub-quantum arrival-offset stream must not perturb the trace's
+# arrival/mobility stream (keyed by (cfg.seed, seed) alone), or stationary
+# would stop replaying request_trace exactly
 _ENVELOPE_STREAM = 7
 _HANDOVER_STREAM = 13
+_OFFSET_STREAM = 17
 
 
 @dataclasses.dataclass
@@ -130,9 +132,14 @@ def workload_trace(cfg: SimConfig, frames: int, workload: str = "stationary",
     for t in range(1, frames):
         poa[t] = rwp.step()
         arrivals[t] = rng.random(u) < rates[t]
+    # sub-quantum arrival timestamps: uniform offsets in [0, 1) on their own
+    # dedicated stream (a quantum-boundary consumer just ignores them)
+    offsets = np.random.default_rng(
+        (cfg.seed, seed, _OFFSET_STREAM)).random((frames, u))
     return RequestTrace(cfg=cfg, frames=frames, arrivals=arrivals, poa=poa,
                         qbar=world["qbar"], service_of=world["service_of"],
-                        rates=rates, qbar_t=draw.qbar_t, workload=workload)
+                        rates=rates, qbar_t=draw.qbar_t, workload=workload,
+                        arrival_offset=offsets)
 
 
 @dataclasses.dataclass

@@ -10,9 +10,10 @@
 import numpy as np
 import pytest
 
-from repro.serving.telemetry import (QuantumEvent, SCHEMA_VERSION,
+from repro.serving.telemetry import (BATCH_FIELDS, QuantumEvent,
+                                     SCHEMA_VERSION, SCHEMA_VERSION_V2,
                                      TelemetryLog, TELEMETRY_VERSION,
-                                     validate)
+                                     TELEMETRY_VERSION_V2, validate)
 from repro.sim.scenarios import get_scenario, request_trace
 from repro.sim.workloads import (arrival_envelope, fleet_trace, get_workload,
                                  workload_names, workload_trace)
@@ -112,6 +113,30 @@ def test_fleet_trace_handover_schedule_is_well_formed():
                               fleet.cells[1].arrivals)
 
 
+# -- sub-quantum arrival offsets (ISSUE 9) -------------------------------------
+
+def test_arrival_offsets_deterministic_and_in_range():
+    """Every workload trace carries ``arrival_offset`` — a (T, U) draw in
+    [0, 1) from a dedicated rng sub-stream (``_OFFSET_STREAM``), so the
+    arrival/PoA/quality streams are untouched (the stationary-replay pin
+    above would fail otherwise)."""
+    t1 = workload_trace(CFG, 12, "flash-crowd", seed=3)
+    t2 = workload_trace(CFG, 12, "flash-crowd", seed=3)
+    assert t1.arrival_offset is not None
+    assert t1.arrival_offset.shape == (12, CFG.num_ues)
+    assert np.all((t1.arrival_offset >= 0.0) & (t1.arrival_offset < 1.0))
+    np.testing.assert_array_equal(t1.arrival_offset, t2.arrival_offset)
+    t3 = workload_trace(CFG, 12, "flash-crowd", seed=4)
+    assert not np.array_equal(t1.arrival_offset, t3.arrival_offset)
+
+
+def test_fleet_trace_cells_have_independent_offsets():
+    fleet = fleet_trace(CFG, 12, 2, workload="diurnal", seed=5)
+    offs = [cell.arrival_offset for cell in fleet.cells]
+    assert all(o is not None for o in offs)
+    assert not np.array_equal(offs[0], offs[1])
+
+
 # -- telemetry schema ----------------------------------------------------------
 
 def _event(frame=0, cell=0):
@@ -173,6 +198,52 @@ def test_telemetry_accepts_legacy_v1_documents():
     assert log.summary()["failovers"] == 0
     # a v1 payload claiming to be v2 is rejected on the missing fields
     with pytest.raises(ValueError, match="node_down"):
+        TelemetryLog.from_json({"version": TELEMETRY_VERSION,
+                                "schema_version": SCHEMA_VERSION,
+                                "events": [ev]})
+
+
+def test_telemetry_v3_batch_fields_round_trip():
+    """Schema v3 (ISSUE 9): per-quantum batch-churn counters and the skewed
+    timestamp survive the JSON round-trip and feed the summary."""
+    import dataclasses
+
+    log = TelemetryLog()
+    log.record(dataclasses.replace(_event(), batch_join=3, batch_leave=2,
+                                   admission_throttled=1,
+                                   slot_occupancy=0.5, time=0.25))
+    log.record(dataclasses.replace(_event(frame=1), batch_join=1,
+                                   slot_occupancy=0.3, time=1.25))
+    doc = log.to_json()
+    assert doc["schema_version"] == SCHEMA_VERSION == 3
+    validate(doc)
+    assert doc["events"][0]["batch_join"] == 3
+    assert doc["events"][0]["time"] == 0.25
+    back = TelemetryLog.from_json(doc)
+    assert back.to_json() == doc
+    s = back.summary()
+    assert s["batch_joins"] == 4 and s["batch_leaves"] == 2
+    assert s["admission_throttled"] == 1
+    assert s["mean_slot_occupancy"] == pytest.approx(0.4)
+
+
+def test_telemetry_accepts_legacy_v2_documents():
+    """v2 documents (fault fields, no batch fields) load with the batch
+    counters zero-filled; a v2 payload claiming v3 is rejected."""
+    ev = _event().to_json()
+    for field in BATCH_FIELDS:
+        del ev[field]
+    legacy = {"version": TELEMETRY_VERSION_V2,
+              "schema_version": SCHEMA_VERSION_V2, "events": [ev]}
+    log = TelemetryLog.from_json(legacy)
+    assert len(log.events) == 1
+    assert log.events[0].batch_join == 0
+    assert log.events[0].slot_occupancy == 0.0
+    assert log.events[0].time == 0.0
+    assert log.summary()["batch_joins"] == 0
+    # round-trips forward as a v3 document
+    assert log.to_json()["schema_version"] == SCHEMA_VERSION
+    with pytest.raises(ValueError, match="batch_join"):
         TelemetryLog.from_json({"version": TELEMETRY_VERSION,
                                 "schema_version": SCHEMA_VERSION,
                                 "events": [ev]})
