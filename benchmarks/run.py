@@ -61,6 +61,9 @@ BENCHES = {
     "resilience": ("benchmarks.bench_resilience",
                    "fault-intensity sweep: node churn x policy x recovery "
                    "mode (drop / failover / failover+degrade)"),
+    "observability": ("benchmarks.bench_observability",
+                      "tracing-off vs tracing-on overhead (2-cell smoke, "
+                      "quantum + continuous) + Perfetto trace export"),
 }
 
 

@@ -71,6 +71,12 @@ def main(argv=None):
                     help="per-cell quantum skew in [0, 1) (continuous only)")
     ap.add_argument("--backpressure-depth", type=float, default=0.0,
                     help="admission throttle depth factor (0 = off)")
+    ap.add_argument("--trace-out", default="",
+                    help="capture a request-level trace and write the "
+                         "schema-validated trace JSON here")
+    ap.add_argument("--trace-perfetto", default="",
+                    help="write the Chrome trace-event JSON here "
+                         "(open in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     cfg = get_scenario(args.scenario)
@@ -119,10 +125,14 @@ def main(argv=None):
             scheduling="continuous")
         print(f"  continuous batching on (skew {args.skew}, "
               f"backpressure depth {args.backpressure_depth or 'off'})")
+    tracing = bool(args.trace_out or args.trace_perfetto)
+    if tracing:
+        print("  request-level tracing on (pure observation; the run is "
+              "pinned frame-for-frame to tracing-off)")
     cluster = cluster_from_scenario(
         cfg, args.cells, services, policy_factory=factory,
         engine_cfg=engine_cfg, telemetry=telemetry, ledger=ledger,
-        recovery=recovery, sched=sched)
+        recovery=recovery, sched=sched, tracing=tracing)
     fleet = fleet_trace(cfg, frames, args.cells, workload=args.workload,
                         seed=args.seed, handover_rate=args.handover_rate)
 
@@ -167,6 +177,26 @@ def main(argv=None):
         with open(args.telemetry_out, "w") as f:
             json.dump(telemetry.to_json(), f, indent=2)
         print(f"telemetry written to {args.telemetry_out}")
+    if tracing:
+        from repro.serving import validate_trace
+        cp = stats.get("critical_path", {})
+        if cp:
+            frac = cp["fractions"]
+            print(f"critical path ({cp['requests']} requests, "
+                  f"{cp['latency_frames']} request-frames): "
+                  + "  ".join(f"{k}={frac[k]:.0%}" for k in frac)
+                  + f"  -> dominant leg: {cp['dominant']}")
+        doc = cluster.tracer.to_json()
+        validate_trace(doc)
+        if args.trace_out:
+            with open(args.trace_out, "w") as f:
+                json.dump(doc, f, indent=2)
+            print(f"trace written to {args.trace_out}")
+        if args.trace_perfetto:
+            with open(args.trace_perfetto, "w") as f:
+                json.dump(cluster.tracer.to_chrome_trace(), f)
+            print(f"Perfetto/Chrome trace written to {args.trace_perfetto} "
+                  f"(open in https://ui.perfetto.dev)")
     return stats
 
 

@@ -119,7 +119,8 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
                  early_exit: bool = True, record: bool = False,
                  return_bridge: bool = False, workload: str = "stationary",
                  workload_params: Optional[Dict] = None,
-                 scheduling: str = "quantum", sched=None):
+                 scheduling: str = "quantum", sched=None,
+                 tracing: bool = False, tracer=None):
     """Deploy one core policy on the serving engine for one scenario trace.
 
     Builds the engine from the scenario's world
@@ -134,7 +135,10 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
     ``scheduling`` selects the engine loop (``"quantum"`` is the lockstep
     reference, ``"continuous"`` the iteration-level scheduler) and
     ``sched`` is the :class:`repro.serving.scheduler.SchedulerConfig` for
-    the continuous path.
+    the continuous path.  ``tracing`` (or an explicit ``tracer``) opts into
+    request-level span recording (:mod:`repro.serving.tracing`) — read the
+    span tree back from ``engine.tracer`` via the returned bridge's engine
+    or by passing your own tracer.
     """
     import dataclasses
 
@@ -143,8 +147,17 @@ def serve_policy(cfg: SimConfig, policy, frames: int, *,
                                              serve_trace)
     from repro.sim.workloads import workload_trace
 
+    if tracer is None and tracing:
+        from repro.serving.tracing import Tracer
+        tracer = Tracer()
+    if tracer is not None:
+        for svc in services.values():
+            instrument = getattr(svc, "instrument", None)
+            if instrument is not None:
+                instrument(tracer.metrics)
     engine, world = engine_from_scenario(cfg, services,
-                                         early_exit=early_exit)
+                                         early_exit=early_exit,
+                                         tracer=tracer)
     if scheduling != "quantum":
         engine.cfg = dataclasses.replace(engine.cfg, scheduling=scheduling)
     if sched is not None:
@@ -169,7 +182,7 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
                        fault_schedule: str = "none",
                        fault_params: Optional[Dict] = None,
                        recovery=None, scheduling: str = "quantum",
-                       sched=None):
+                       sched=None, tracing: bool = False, tracer=None):
     """Deploy policies on a C-cell fleet for one scenario × workload.
 
     ``policy_factory(cell) -> Policy`` builds each cell's placement policy
@@ -197,7 +210,8 @@ def serve_fleet_policy(cfg: SimConfig, policy_factory, frames: int, *,
     cluster = cluster_from_scenario(
         cfg, cells, services, policy_factory=policy_factory,
         early_exit=early_exit, stacked=stacked, telemetry=telemetry,
-        ledger=ledger, recovery=recovery, sched=sched)
+        ledger=ledger, recovery=recovery, sched=sched,
+        tracing=tracing, tracer=tracer)
     if scheduling != "quantum":
         for eng in cluster.engines:
             eng.cfg = dataclasses.replace(eng.cfg, scheduling=scheduling)
@@ -222,7 +236,8 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
                         fault_schedule: str = "none",
                         fault_params: Optional[Dict] = None,
                         recovery=None, impl: Optional[str] = None,
-                        scheduling: str = "quantum", sched=None):
+                        scheduling: str = "quantum", sched=None,
+                        tracing: bool = False, tracer=None):
     """The closed loop at fleet scale: sim-train ONE placement variant
     against the measured Ω curves, then deploy it to every cell of a
     C-cell cluster and serve the fleet workload (optionally under an
@@ -245,7 +260,8 @@ def serve_fleet_variant(cfg: SimConfig, variant: str = "learn-gdm", *,
         cells=cells, services=services, workload=workload, seed=seed,
         handover_rate=handover_rate, workload_params=workload_params,
         fault_schedule=fault_schedule, fault_params=fault_params,
-        recovery=recovery, scheduling=scheduling, sched=sched)
+        recovery=recovery, scheduling=scheduling, sched=sched,
+        tracing=tracing, tracer=tracer)
     stats["train_episodes"] = train_eps
     return stats
 

@@ -38,3 +38,11 @@ from repro.serving.telemetry import (  # noqa: F401
     QuantumEvent,
     TelemetryLog,
 )
+from repro.serving.tracing import (  # noqa: F401
+    TRACE_SCHEMA,
+    TRACE_SCHEMA_VERSION,
+    Histogram,
+    MetricsRegistry,
+    Tracer,
+    validate_trace,
+)

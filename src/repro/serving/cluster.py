@@ -53,6 +53,7 @@ from repro.serving.policy_bridge import (ServingPolicy, engine_from_scenario,
                                          submit_arrivals)
 from repro.serving.kv_manager import TransferLedger, state_nbytes
 from repro.serving.telemetry import TelemetryLog
+from repro.serving.tracing import Tracer, latency_summary
 from repro.sim.env import SimConfig
 
 
@@ -72,7 +73,8 @@ class ClusterEngine:
                  services: Dict[int, object], *, stacked: bool = True,
                  handover_cost: float = 0.4,
                  ledger: Optional[TransferLedger] = None,
-                 mesh=None, batch_axis: str = "batch"):
+                 mesh=None, batch_axis: str = "batch",
+                 tracer: Optional[Tracer] = None):
         assert engines, "a cluster needs at least one cell"
         self.engines = engines
         self.services = services
@@ -81,6 +83,11 @@ class ClusterEngine:
         # the fleet ledger records cross-cell handovers (src/dst are CELL
         # ids); per-cell ledgers on the engines record intra-cell legs
         self.ledger = ledger
+        # the fleet shares ONE tracer (cells hold the same object, so
+        # cross-cell requests keep a single span tree); default to whatever
+        # the cells were built with
+        self.tracer = tracer if tracer is not None else next(
+            (e.tracer for e in engines if e.tracer is not None), None)
         self.handovers_applied = 0
         # mesh-sharded fleet: each cell has a home device (round-robin) and
         # the stacked per-service batch is sharded over the batch axis by
@@ -161,6 +168,10 @@ class ClusterEngine:
                            if led is not None}.values():
                 ledger.record(self.frame, pending.rid, "handover",
                               ev.src_cell, ev.dst_cell, 0, 0.0)
+            if self.tracer is not None:          # mirror the zero-byte row
+                self.tracer.on_transfer(pending.rid, "handover", ev.src_cell,
+                                        ev.dst_cell, 0, 0.0, self.frame,
+                                        ev.dst_cell)
             self.handovers_applied += 1
             return True
         busy = any(r.ue == ev.ue for r in dst.active) or \
@@ -189,6 +200,10 @@ class ClusterEngine:
         if self.ledger is not None and src_dev != dst_dev:
             self.ledger.record(self.frame, req.rid, "shard", src_dev,
                                dst_dev, state_nbytes(req.state), 0.0)
+        if self.tracer is not None and src_dev != dst_dev:
+            self.tracer.on_transfer(req.rid, "shard", src_dev, dst_dev,
+                                    state_nbytes(req.state), 0.0, self.frame,
+                                    ev.dst_cell)
         req.origin = ev.dst_origin               # re-enter at the new PoA
         req.node = -1                            # placement restarts there
         dst.active.append(req)                   # admission carries over
@@ -247,7 +262,7 @@ class ClusterEngine:
         per_cell = [eng.summary(frames) for eng in self.engines]
         done = [r for eng in self.engines for r in eng.completed]
         lat = [r.delivered_frame - r.arrival_frame + 1 for r in done]
-        return {
+        out = {
             "cells": self.num_cells,
             "frames": frames,
             "completed": len(done),
@@ -269,6 +284,13 @@ class ClusterEngine:
             "throttled": int(sum(c["throttled"] for c in per_cell)),
             "per_cell": per_cell,
         }
+        out.update(latency_summary(lat))
+        if self.tracer is not None:
+            # fleet-wide which-leg-dominates rollup (every completed rid —
+            # cells share one tracer); only present with tracing on
+            out["critical_path"] = self.tracer.critical_path_report(
+                {r.rid for r in done})
+        return out
 
 
 # -- deployment helpers --------------------------------------------------------
@@ -284,7 +306,9 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
                           telemetry: Optional[TelemetryLog] = None,
                           ledger: Optional[TransferLedger] = None,
                           mesh=None, batch_axis: str = "batch",
-                          recovery=None, sched=None) -> ClusterEngine:
+                          recovery=None, sched=None,
+                          tracing: bool = False,
+                          tracer: Optional[Tracer] = None) -> ClusterEngine:
     """Build a C-cell fleet for one named scenario.
 
     Every cell replicates the scenario's Table II world (same nodes, same
@@ -310,12 +334,26 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
     :func:`repro.serving.scheduler.attach_scheduler`; pair it with
     ``engine_cfg.scheduling == "continuous"`` to opt into the
     iteration-level scheduler.
+
+    ``tracing=True`` (or an explicit ``tracer``) attaches ONE shared
+    :class:`repro.serving.tracing.Tracer` to every cell — cross-cell
+    requests keep a single span tree — and instruments the shared services'
+    jitted runners into its metrics registry.  Pure observation: the run
+    stays frame-for-frame identical (``tests/test_tracing.py``).
     """
+    if tracer is None and (tracing
+                           or (engine_cfg is not None and engine_cfg.tracing)):
+        tracer = Tracer()
+    if tracer is not None:
+        for svc in services.values():
+            instrument = getattr(svc, "instrument", None)
+            if instrument is not None:
+                instrument(tracer.metrics)
     engines = []
     for c in range(num_cells):
         engine, world = engine_from_scenario(
             cfg, services, engine_cfg=engine_cfg, world=world,
-            early_exit=early_exit, recovery=recovery)
+            early_exit=early_exit, recovery=recovery, tracer=tracer)
         engine.cell_id = c
         engine.telemetry = telemetry
         engine.ledger = ledger
@@ -325,7 +363,7 @@ def cluster_from_scenario(cfg: SimConfig, num_cells: int,
         engines.append(engine)
     cluster = ClusterEngine(engines, services, stacked=stacked,
                             handover_cost=handover_cost, ledger=ledger,
-                            mesh=mesh, batch_axis=batch_axis)
+                            mesh=mesh, batch_axis=batch_axis, tracer=tracer)
     if sched is not None:
         from repro.serving.scheduler import attach_scheduler
         attach_scheduler(cluster, sched)

@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.serving.kv_manager import TransferLedger, state_nbytes
 from repro.serving.telemetry import QuantumEvent, TelemetryLog
+from repro.serving.tracing import Tracer, latency_summary
 
 
 @dataclasses.dataclass
@@ -151,6 +152,10 @@ class EngineConfig:
     # steps (join/leave, per-cell skew, backpressure admission) — with those
     # knobs disabled it is pinned frame-for-frame to the quantum engine.
     scheduling: str = "quantum"
+    # opt-in request-level tracing (repro.serving.tracing.Tracer): strictly
+    # pure observation — a tracing run is pinned frame-for-frame to a
+    # tracing-off run (tests/test_tracing.py), like the zero-fault pin
+    tracing: bool = False
 
     def __post_init__(self):
         assert self.scheduling in ("quantum", "continuous"), \
@@ -217,7 +222,8 @@ class ServingEngine:
                  placement_fn: Optional[Callable] = None, *,
                  cell_id: int = 0, ledger: Optional[TransferLedger] = None,
                  telemetry: Optional[TelemetryLog] = None,
-                 recovery: Optional[RecoveryConfig] = None):
+                 recovery: Optional[RecoveryConfig] = None,
+                 tracer: Optional[Tracer] = None):
         self.nodes = nodes
         self.cfg = cfg
         self.y_hat = trans_cost                     # (N, N) node-to-node cost
@@ -232,6 +238,12 @@ class ServingEngine:
         self.cell_id = cell_id
         self.ledger = ledger
         self.telemetry = telemetry
+        # request-level tracer (repro.serving.tracing): a fleet shares ONE
+        # tracer (cluster_from_scenario passes it in) so cross-cell requests
+        # keep a single span tree; a standalone engine with cfg.tracing set
+        # creates its own.  Every hook below is guarded and pure observation.
+        self.tracer = tracer if tracer is not None else (
+            Tracer() if cfg.tracing else None)
         self.ue_poa: Optional[np.ndarray] = None    # UE -> PoA node stream
         self._last_admitted = 0
         self._last_dropped = 0
@@ -295,6 +307,9 @@ class ServingEngine:
                 and req.deadline < 0:
             req.deadline = self.frame + self.recovery.deadline_frames
         self.pending.append(req)
+        if self.tracer is not None:
+            self.tracer.on_submit(req.rid, req.ue, req.service, self.cell_id,
+                                  self.frame)
 
     def set_fault_state(self, node_up=None, *, cap_scale=None,
                         link_scale=None) -> None:
@@ -355,9 +370,14 @@ class ServingEngine:
         req.trans_cost += cost
         setattr(req, f"{kind}_cost", getattr(req, f"{kind}_cost") + cost)
         self._legs_quantum[kind] += cost
-        if self.ledger is not None:
-            self.ledger.record(self.frame, req.rid, kind, src, dst,
-                               state_nbytes(req.state), cost)
+        if self.ledger is not None or self.tracer is not None:
+            nbytes = state_nbytes(req.state)     # walk the payload ONCE
+            if self.ledger is not None:
+                self.ledger.record(self.frame, req.rid, kind, src, dst,
+                                   nbytes, cost)
+            if self.tracer is not None:
+                self.tracer.on_transfer(req.rid, kind, src, dst, nbytes,
+                                        cost, self.frame, self.cell_id)
 
     @staticmethod
     def _priority(req: Request) -> float:
@@ -438,11 +458,17 @@ class ServingEngine:
                                 << min(req.retries, 16))
                     req.next_retry_frame = self.frame + delay
                     req.retries += 1
+                    if self.tracer is not None:
+                        self.tracer.on_backoff(req.rid, self.cell_id,
+                                               self.frame,
+                                               req.next_retry_frame)
                 continue
             node_taken[entry] += 1
             req.admitted = True
             self.active.append(req)
             taken.add(id(req))
+            if self.tracer is not None:
+                self.tracer.on_admit(req.rid, self.frame)
             if throttle:
                 live_by_svc[req.service] = \
                     live_by_svc.get(req.service, 0) + 1
@@ -488,6 +514,8 @@ class ServingEngine:
         req.outcome = outcome
         self.failed.append(req)
         self._denied_once.discard(req.rid)
+        if self.tracer is not None:
+            self.tracer.on_failed(req.rid, self.frame, outcome)
         if req.rid in self._batch_rids:              # vacate its batch slot
             self._batch_rids.discard(req.rid)
             self._q_leaves += 1
@@ -678,6 +706,15 @@ class ServingEngine:
             req.node = target
             assigned.setdefault(target, []).append(req)
 
+        if self.tracer is not None:
+            # one compute span per planned block, on the (cell, node) track,
+            # at this quantum's current micro-step (_q_steps is 0-based here;
+            # it advances just below)
+            step = self._q_steps
+            for target, reqs in assigned.items():
+                for req in reqs:
+                    self.tracer.on_compute(req.rid, self.cell_id, target,
+                                           self.frame, step)
         self._q_steps += 1
         planned = sum(len(v) for v in assigned.values())
         self._q_planned += planned
@@ -721,6 +758,8 @@ class ServingEngine:
             req.delivered_frame = self.frame
             self.active.remove(req)
             self.completed.append(req)
+            if self.tracer is not None:
+                self.tracer.on_complete(req.rid, self.frame)
             # prune the denied-once set: a long-running engine must not
             # leak an entry per rid, and a recycled rid must be counted
             # as a fresh admission drop
@@ -767,6 +806,12 @@ class ServingEngine:
         self._q_failovers = self._q_retries = 0
         self._q_deadline_misses = self._q_drops = 0
         self._q_joins = self._q_leaves = self._q_throttled = 0
+        if self.tracer is not None:
+            # quantum mark: micro-step count + skewed timestamp — resolves
+            # compute-span step indices to timeline positions at export
+            self.tracer.on_quantum(self.cell_id, self.frame,
+                                   max(self._q_steps, 1),
+                                   float(self.frame) + self.skew)
 
         self.prev_loads = loads
         self.frame += 1
@@ -813,7 +858,7 @@ class ServingEngine:
         threshold-gated quality minus scaled execution/transmission cost)."""
         done = self.completed
         lat = [r.delivered_frame - r.arrival_frame + 1 for r in done]
-        return {
+        out = {
             "completed": len(done),
             # completions that landed within their deadline (deadline-free
             # requests always count) — the resilience bench's headline metric
@@ -850,6 +895,16 @@ class ServingEngine:
             "throttled": self.throttled_total,
             "frames": frames,
         }
+        # p50/p99/max ride alongside the pre-existing mean/p95 (same lat
+        # list -> identical whether or not tracing is on)
+        out.update(latency_summary(lat))
+        if self.tracer is not None:
+            # which-leg-dominates rollup over THIS cell's completed set (a
+            # fleet-shared tracer holds every cell's spans); only present
+            # with tracing on — pin tests strip it before comparing
+            out["critical_path"] = self.tracer.critical_path_report(
+                {r.rid for r in done})
+        return out
 
     def run(self, frames: int) -> Dict[str, float]:
         for _ in range(frames):

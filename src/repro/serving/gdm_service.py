@@ -21,6 +21,7 @@ block across nodes.  Two contracts back the engine:
 from __future__ import annotations
 
 import os
+import time
 from typing import Dict, List, Optional, Tuple
 
 import jax
@@ -81,6 +82,14 @@ class GDMService:
         # service without recompiling the default hot path)
         self._runners: Dict[str, object] = {}
         self._runner = self._runner_for(self.impl)
+        # observability (repro.serving.tracing): instrument() attaches a
+        # MetricsRegistry; _call_runner then wall-clocks every compiled call
+        # and flags compile events by first-seen (impl, bucket) shape key
+        # (XLA recompiles are shape-keyed).  None -> the raw runner call.
+        self.metrics = None
+        self._compiled_keys: set = set()
+        self._sample_every = 16
+        self._steady_calls = 0
 
         # Ω(k): measured SSIM-vs-final per block (Fig. 1 protocol), forced
         # monotone — measured curves are monotone in expectation only
@@ -118,6 +127,48 @@ class GDMService:
             jit_kw["out_shardings"] = (data, data)
         runner = self._runners[impl] = jax.jit(_run, **jit_kw)
         return runner
+
+    def instrument(self, metrics, sample_every: int = 16) -> None:
+        """Attach a :class:`repro.serving.tracing.MetricsRegistry`: jitted
+        runner calls are wall-clocked into ``gdm_run_batch_ms`` (steady
+        state) or ``gdm_compile_ms`` (first call at a new (impl, bucket)
+        shape — a compile event, also counted in ``gdm_compile_events``).
+        Attach BEFORE serving traffic so the first-seen set is honest.
+
+        Honest wall-clock needs ``jax.block_until_ready``, and forcing
+        that sync on EVERY call defeats async dispatch overlap — so
+        steady-state calls are only timed every ``sample_every``-th call
+        (compile events are always timed); the rest dispatch untouched.
+        ``sample_every=1`` times everything."""
+        self.metrics = metrics
+        self._sample_every = max(int(sample_every), 1)
+        self._steady_calls = 0
+
+    def _call_runner(self, latent_buf, prompt_buf, idx_buf):
+        """The one seam both batch paths (run_batch / SlotBatch.step) issue
+        their device call through; uninstrumented it IS the raw call."""
+        if self.metrics is None:
+            return self._runner(latent_buf, prompt_buf, idx_buf)
+        m = self.metrics
+        key = (self.impl, int(latent_buf.shape[0]))
+        first = key not in self._compiled_keys
+        m.counter("gdm_runner_calls").inc()
+        m.gauge("gdm_last_batch_rows").set(latent_buf.shape[0])
+        if not first:
+            self._steady_calls += 1
+            if self._steady_calls % self._sample_every:
+                return self._runner(latent_buf, prompt_buf, idx_buf)
+        t0 = time.perf_counter()
+        out = self._runner(latent_buf, prompt_buf, idx_buf)
+        jax.block_until_ready(out)
+        dt_ms = (time.perf_counter() - t0) * 1e3
+        if first:
+            self._compiled_keys.add(key)
+            m.counter("gdm_compile_events").inc()
+            m.histogram("gdm_compile_ms").observe(dt_ms)
+        else:
+            m.histogram("gdm_run_batch_ms").observe(dt_ms)
+        return out
 
     # -- engine contracts -----------------------------------------------------
 
@@ -188,7 +239,7 @@ class GDMService:
         idx_buf[b:] = 0
         # pad rows keep whatever latents a previous call staged (plus a
         # valid block 0 index) — per-sample independence makes them inert
-        latent, x0 = self._runner(latent_buf, prompt_buf, idx_buf)
+        latent, x0 = self._call_runner(latent_buf, prompt_buf, idx_buf)
         self.batch_calls += 1
         latent = np.asarray(latent)
         x0 = np.asarray(x0)
@@ -304,7 +355,7 @@ class SlotBatch:
         idx_buf[:] = 0                             # pad rows: valid block 0
         for (rid, _, k) in items:
             idx_buf[self.rows[rid]] = k
-        latent_out, x0 = svc._runner(latent_buf, prompt_buf, idx_buf)
+        latent_out, x0 = svc._call_runner(latent_buf, prompt_buf, idx_buf)
         svc.batch_calls += 1
         self.device_calls += 1
         latent_out = np.asarray(latent_out)

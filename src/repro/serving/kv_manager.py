@@ -104,6 +104,20 @@ class TransferLedger:
             t["cost"] += ev.cost
         return out
 
+    def per_request(self) -> Dict[int, Dict[str, Dict[str, float]]]:
+        """Per-rid, per-kind byte/cost aggregate — the ledger-side view the
+        tracer's transfer spans must reconcile with (``tests/test_tracing.py``
+        cross-checks them event for event)."""
+        out: Dict[int, Dict[str, Dict[str, float]]] = {}
+        for ev in self.events:
+            kinds = out.setdefault(ev.rid, {})
+            t = kinds.setdefault(ev.kind,
+                                 {"count": 0, "nbytes": 0, "cost": 0.0})
+            t["count"] += 1
+            t["nbytes"] += ev.nbytes
+            t["cost"] += ev.cost
+        return out
+
 
 @dataclasses.dataclass
 class PageTable:

@@ -34,6 +34,7 @@ engine with the sim's idle-gated Bernoulli arrival semantics).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Dict, List, Optional
 
@@ -154,8 +155,17 @@ class ServingPolicy:
                          blocks[None],
                          node_up=up[None] if engine._fault_active
                          and not up.all() else None)
-        self._actions = np.asarray(
-            self.policy.act_batch(view, obs_hist))[0].astype(int)
+        if engine.tracer is not None:
+            # wall-clock the batched decision into the metrics registry
+            # (observation only; the action path is untouched)
+            t0 = time.perf_counter()
+            acts = self.policy.act_batch(view, obs_hist)
+            engine.tracer.metrics.histogram("policy_act_batch_ms").observe(
+                (time.perf_counter() - t0) * 1e3)
+            engine.tracer.metrics.counter("policy_act_batch_calls").inc()
+        else:
+            acts = self.policy.act_batch(view, obs_hist)
+        self._actions = np.asarray(acts)[0].astype(int)
         if self.record:
             self.trace.append((engine.frame,
                                None if obs_hist is None else obs_hist.copy(),
@@ -171,7 +181,8 @@ class ServingPolicy:
 def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
                          engine_cfg: Optional[EngineConfig] = None,
                          world: Optional[Dict[str, np.ndarray]] = None,
-                         early_exit: bool = True, recovery=None):
+                         early_exit: bool = True, recovery=None,
+                         tracer=None):
     """Build the ServingEngine matching a sim scenario's world.
 
     Nodes replicate the Table II world draw (one node per BS, capacity
@@ -182,7 +193,8 @@ def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
     a plain ``(state, k) -> (state, quality)`` callable.
 
     Returns ``(engine, world)`` so callers can hand the SAME world to
-    :class:`ServingPolicy`.
+    :class:`ServingPolicy`.  ``tracer`` (or ``engine_cfg.tracing``) opts
+    into request-level tracing (:mod:`repro.serving.tracing`).
     """
     world = world if world is not None else draw_static_world(
         cfg, np.random.default_rng(cfg.seed))
@@ -198,7 +210,7 @@ def engine_from_scenario(cfg: SimConfig, services: Dict[int, object], *,
         max_blocks=cfg.max_blocks, admission_slots=cfg.num_channels,
         alpha=cfg.alpha, beta=cfg.beta, early_exit=early_exit, seed=cfg.seed)
     return ServingEngine(nodes, ecfg, grid_trans_cost(cfg),
-                         recovery=recovery), world
+                         recovery=recovery, tracer=tracer), world
 
 
 def submit_arrivals(engine: ServingEngine, trace, t: int,

@@ -150,6 +150,11 @@ def _execute_step(cluster, pairs: List[Tuple[ServingEngine, Dict]],
                 reqs_s, costs_s = groups.setdefault(req.service, ([], []))
                 reqs_s.append(req)
                 costs_s.append(cost)
+    if cluster.tracer is not None:
+        # stacked batch size per step into the metrics registry (how full
+        # the fused device call runs under continuous scheduling)
+        cluster.tracer.metrics.histogram("fleet_step_batch_rows").observe(
+            sum(len(reqs) for _, plan in pairs for reqs in plan.values()))
     for service in sorted(groups):
         reqs, costs = groups[service]
         svc = cluster.services[service]

@@ -200,6 +200,15 @@ class QuantumEvent:
         d = dataclasses.asdict(self)
         d["node_load"] = [int(x) for x in self.node_load]
         d["node_capacity"] = [int(x) for x in self.node_capacity]
+        # a leg kind the schema doesn't know would silently vanish from
+        # artifacts if we just projected onto LEGS — fail loudly instead so
+        # adding a transfer kind forces a schema rev
+        unknown = set(self.legs) - set(LEGS)
+        if unknown:
+            raise ValueError(
+                f"QuantumEvent.legs has keys outside the schema "
+                f"({sorted(unknown)}); add them to LEGS and rev the "
+                f"telemetry schema")
         d["legs"] = {k: float(self.legs.get(k, 0.0)) for k in LEGS}
         for f in FAULT_FIELDS:
             d[f] = int(d[f])

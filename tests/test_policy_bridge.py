@@ -96,6 +96,31 @@ def test_greedy_bridge_matches_default_placement_frame_for_frame():
     assert summaries[0] == summaries[1]
 
 
+# -- summary latency percentiles (ISSUE 10 satellite) --------------------------
+
+def test_summary_reports_p50_p99_max_alongside_existing_fields():
+    """p50/p99/max ride alongside mean/p95; the pre-existing fields stay
+    bit-identical to their original np formulas, and the tracer-only
+    ``critical_path`` key is absent with tracing off."""
+    cfg = get_scenario("smoke")
+    services = _services(cfg)
+    engine, world = engine_from_scenario(cfg, services)
+    trace = request_trace(cfg, 12, seed=3)
+    out = serve_trace(engine, trace, services, seed=3)
+    lat = [r.delivered_frame - r.arrival_frame + 1 for r in engine.completed]
+    assert lat, "run completed nothing"
+    # the original fields, computed the original way
+    assert out["mean_latency_frames"] == float(np.mean(lat))
+    assert out["p95_latency_frames"] == float(np.percentile(lat, 95))
+    # the new fields, exact percentiles over the same latency list
+    assert out["p50_latency_frames"] == float(np.percentile(lat, 50))
+    assert out["p99_latency_frames"] == float(np.percentile(lat, 99))
+    assert out["max_latency_frames"] == float(max(lat))
+    assert out["p50_latency_frames"] <= out["p95_latency_frames"] \
+        <= out["p99_latency_frames"] <= out["max_latency_frames"]
+    assert "critical_path" not in out
+
+
 # -- learned bridge == direct greedy_act on the bridged observations -----------
 
 def test_learned_bridge_matches_direct_greedy_act():

@@ -10,9 +10,10 @@
 import numpy as np
 import pytest
 
-from repro.serving.telemetry import (BATCH_FIELDS, QuantumEvent,
+from repro.serving.telemetry import (BATCH_FIELDS, FAULT_FIELDS, QuantumEvent,
                                      SCHEMA_VERSION, SCHEMA_VERSION_V2,
                                      TelemetryLog, TELEMETRY_VERSION,
+                                     TELEMETRY_VERSION_V1,
                                      TELEMETRY_VERSION_V2, validate)
 from repro.sim.scenarios import get_scenario, request_trace
 from repro.sim.workloads import (arrival_envelope, fleet_trace, get_workload,
@@ -247,6 +248,60 @@ def test_telemetry_accepts_legacy_v2_documents():
         TelemetryLog.from_json({"version": TELEMETRY_VERSION,
                                 "schema_version": SCHEMA_VERSION,
                                 "events": [ev]})
+
+
+def test_quantum_event_rejects_unknown_leg_keys():
+    """ISSUE 10 satellite: a leg kind the schema doesn't know must fail
+    loudly at serialization time instead of silently vanishing from the
+    artifact — adding a transfer kind forces a telemetry schema rev."""
+    ev = _event()
+    ev.legs["teleport"] = 0.5
+    with pytest.raises(ValueError, match="teleport"):
+        ev.to_json()
+    # known-but-omitted legs still zero-fill (the projection is unchanged)
+    ok = _event()
+    del ok.legs["downlink"]
+    assert ok.to_json()["legs"]["downlink"] == 0.0
+
+
+def _legacy_doc(schema_version):
+    """A well-formed document at each historical schema version."""
+    ev = _event().to_json()
+    if schema_version == 1:
+        for field in FAULT_FIELDS + BATCH_FIELDS:
+            del ev[field]
+        del ev["legs"]["failover"]
+        return {"version": TELEMETRY_VERSION_V1, "events": [ev]}
+    if schema_version == 2:
+        for field in BATCH_FIELDS:
+            del ev[field]
+        return {"version": TELEMETRY_VERSION_V2,
+                "schema_version": SCHEMA_VERSION_V2, "events": [ev]}
+    return {"version": TELEMETRY_VERSION,
+            "schema_version": SCHEMA_VERSION, "events": [ev]}
+
+
+@pytest.mark.parametrize("schema_version", [1, 2, 3])
+def test_telemetry_legacy_load_matrix(schema_version):
+    """ISSUE 10 satellite: every historical schema version loads through
+    ``from_json``; fields younger than the document zero-fill, and the
+    result round-trips forward as a current-version document."""
+    log = TelemetryLog.from_json(_legacy_doc(schema_version))
+    assert len(log.events) == 1
+    ev = log.events[0]
+    if schema_version < 2:
+        assert all(getattr(ev, f) == 0 for f in FAULT_FIELDS)
+        assert ev.legs.get("failover", 0.0) == 0.0
+    if schema_version < 3:
+        assert ev.batch_join == ev.batch_leave == 0
+        assert ev.admission_throttled == 0
+        assert ev.slot_occupancy == 0.0 and ev.time == 0.0
+    # fields the document DID carry survive untouched
+    assert ev.queue_depth == 2 and ev.admitted == 3
+    assert ev.legs["compute"] == 1.0
+    doc = log.to_json()
+    assert doc["schema_version"] == SCHEMA_VERSION
+    assert TelemetryLog.from_json(doc).to_json() == doc
 
 
 def test_engine_emits_schema_valid_telemetry(tmp_path):
